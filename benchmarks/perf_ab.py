@@ -1,0 +1,91 @@
+"""§Perf A/B measurements for the three hillclimbed cells.
+
+For each cell, measures (under the FINAL roofline analyzer, so numbers are
+comparable) the paper-faithful BASELINE configuration and each optimization
+step, writing experiments/perf/<cell>.json.  This is the machine-readable
+source for the EXPERIMENTS.md §Perf iteration log.
+
+  PYTHONPATH=src python -m benchmarks.perf_ab
+"""
+
+from __future__ import annotations
+
+import os
+
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=512")
+
+import json  # noqa: E402
+
+from repro.configs import get_config  # noqa: E402
+from repro.launch.dryrun import run_cell  # noqa: E402
+
+OUT = "experiments/perf"
+
+
+def run(tag: str, arch: str, shape: str, cfg, micro: int = 1) -> dict:
+    path = os.path.join(OUT, f"{tag}.json")
+    if os.path.exists(path):
+        rec = json.load(open(path))
+        if rec.get("status") == "ok":
+            print(f"[cached] {tag}")
+            return rec
+    rec = run_cell(arch, shape, False, cfg_override=cfg, microbatches=micro)
+    rec["tag"] = tag
+    json.dump(rec, open(path, "w"), indent=1)
+    rl = rec.get("roofline", {})
+    print(f"[{rec['status']}] {tag}: step={rl.get('step_s', 0):.2f}s "
+          f"dom={rl.get('dominant')} frac={rl.get('roofline_fraction', 0):.4f}")
+    return rec
+
+
+def main():
+    os.makedirs(OUT, exist_ok=True)
+
+    # ---- cell A: zamba2-1.2b train_4k (worst roofline fraction) ----------
+    z = get_config("zamba2-1.2b")
+    run("zamba2_train_0_baseline", "zamba2-1.2b", "train_4k",
+        z.scaled(ssm_impl="naive"))
+    run("zamba2_train_1_ssd", "zamba2-1.2b", "train_4k", z)  # ssd default
+    run("zamba2_train_2_ssd_blockattn_remat", "zamba2-1.2b", "train_4k",
+        z.scaled(attn_impl="blockwise", attn_block=512, remat="full"))
+    run("zamba2_train_3_plus_losschunk", "zamba2-1.2b", "train_4k",
+        z.scaled(attn_impl="blockwise", attn_block=512, remat="full",
+                 loss_chunk=512))
+
+    # ---- cell B: deepseek-v3-671b train_4k (most collective-bound) -------
+    d = get_config("deepseek-v3-671b")
+    run("deepseek_train_0_baseline", "deepseek-v3-671b", "train_4k",
+        d.scaled(gnorm_vdot=True))
+    run("deepseek_train_1_sharded_gnorm", "deepseek-v3-671b", "train_4k", d)
+    run("deepseek_train_2_blockattn", "deepseek-v3-671b", "train_4k",
+        d.scaled(attn_impl="blockwise", attn_block=512))
+    run("deepseek_train_3_plus_losschunk", "deepseek-v3-671b", "train_4k",
+        d.scaled(attn_impl="blockwise", attn_block=512, loss_chunk=512))
+
+    # ---- cell C: qwen2-vl-72b prefill_32k (attention-memory-bound) -------
+    q = get_config("qwen2-vl-72b")
+    run("qwen2vl_prefill_0_baseline", "qwen2-vl-72b", "prefill_32k", q)
+    run("qwen2vl_prefill_1_blockattn", "qwen2-vl-72b", "prefill_32k",
+        q.scaled(attn_impl="blockwise", attn_block=512))
+    run("qwen2vl_prefill_2_blockattn1k", "qwen2-vl-72b", "prefill_32k",
+        q.scaled(attn_impl="blockwise", attn_block=1024))
+    run("qwen2vl_prefill_3_nofsdp", "qwen2-vl-72b", "prefill_32k",
+        q.scaled(attn_impl="blockwise", attn_block=512, fsdp=False))
+
+    # ---- bonus D: falcon-mamba-7b train_4k (worst memory after resweep) ---
+    f = get_config("falcon-mamba-7b")
+    run("falcon_train_0_baseline", "falcon-mamba-7b", "train_4k",
+        f.scaled(ssm_impl="naive"))
+    run("falcon_train_1_chunked", "falcon-mamba-7b", "train_4k", f)
+    run("falcon_train_2_chunked_remat", "falcon-mamba-7b", "train_4k",
+        f.scaled(remat="full"))
+
+    # ---- bonus E: deepseek-v3-671b decode_32k (weight-gather collectives) -
+    run("deepseek_decode_0_gather", "deepseek-v3-671b", "decode_32k",
+        d.scaled(moe_mode="dense"))
+    run("deepseek_decode_1_ep_a2a", "deepseek-v3-671b", "decode_32k", d)
+
+
+if __name__ == "__main__":
+    main()

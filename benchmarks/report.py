@@ -1,0 +1,48 @@
+"""Render the §Dry-run / §Roofline markdown tables from the recorded cell
+jsons.  Usage:  PYTHONPATH=src python -m benchmarks.report [--mesh single]
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+
+
+DEFAULT_DIR = ("experiments/dryrun_final"
+               if glob.glob("experiments/dryrun_final/*.json")
+               else "experiments/dryrun")
+
+
+def rows(mesh: str, d: str = None):
+    out = []
+    for f in sorted(glob.glob(f"{d or DEFAULT_DIR}/*.json")):
+        r = json.load(open(f))
+        if r.get("mesh") != ("2x16x16" if mesh == "multi" else "16x16"):
+            continue
+        out.append(r)
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    args = ap.parse_args()
+    rs = rows(args.mesh)
+    print("| arch | shape | status | compile s | temp GB/dev | compute s | "
+          "memory s | collective s | dominant | useful | roofline frac |")
+    print("|---|---|---|---|---|---|---|---|---|---|---|")
+    for r in rs:
+        if r["status"] != "ok":
+            print(f"| {r['arch']} | {r['shape']} | FAIL | | | | | | | | |")
+            continue
+        rl = r["roofline"]
+        temp = r["memory"].get("temp_size_in_bytes", 0) / 1e9
+        print(f"| {r['arch']} | {r['shape']} | ok | {r['compile_s']:.0f} | "
+              f"{temp:.1f} | {rl['compute_s']:.3g} | {rl['memory_s']:.3g} | "
+              f"{rl['collective_s']:.3g} | {rl['dominant']} | "
+              f"{rl['useful_ratio']:.2f} | {rl['roofline_fraction']:.4f} |")
+
+
+if __name__ == "__main__":
+    main()

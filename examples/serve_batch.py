@@ -1,0 +1,26 @@
+"""Batched serving demo across architecture families: prefill a batch of
+prompts and decode continuations with KV / compressed-MLA / SSM caches.
+
+    PYTHONPATH=src python examples/serve_batch.py
+"""
+
+import os
+import subprocess
+import sys
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+def main():
+    for arch in ("qwen3-0.6b", "deepseek-v3-671b", "falcon-mamba-7b",
+                 "zamba2-1.2b"):
+        print(f"=== {arch} (reduced config) ===", flush=True)
+        subprocess.run(
+            [sys.executable, "-m", "repro.launch.serve", "--arch", arch,
+             "--smoke", "--batch", "4", "--prompt-len", "24", "--gen", "8"],
+            env={**os.environ, "PYTHONPATH": os.path.join(ROOT, "src")},
+            cwd=ROOT, check=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,175 @@
+"""GEVO-Shard: the paper's evolutionary search applied to the DISTRIBUTION
+PLAN of a pod-scale model.
+
+The genome is not IR edits but the per-cell performance knobs (remat policy,
+attention implementation and block size, loss chunking, FSDP on/off,
+microbatching); the fitness is the multi-objective
+``argmin(step_time, device_memory)`` measured on the compiled dry-run's
+three-term roofline — the same NSGA-II machinery as the IR-level search
+(nsga2.py), with elites and one-point-free uniform recombination (genomes
+are fixed-length dicts, so the paper's messy crossover degenerates to
+uniform gene mixing).
+
+This is how the paper's technique becomes a first-class feature of the
+multi-pod framework: fitness evaluations that took 48 GPU-hours of model
+retraining in the paper cost one XLA compile here, so the search is
+practical per (arch x shape) cell.  Used by the §Perf hillclimbs.
+
+CLI:  PYTHONPATH=src python -m repro.core.autotune --arch qwen2-vl-72b \
+          --shape train_4k --generations 4 --pop 6
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import numpy as np
+
+from .nsga2 import pareto_front, rank_population, select_elites, tournament
+
+GENOME_SPACE: dict[str, list] = {
+    "remat": ["none", "full"],
+    "attn_impl": ["naive", "blockwise"],
+    "attn_block": [256, 512, 1024, 2048],
+    "loss_chunk": [0, 512, 1024],
+    "fsdp": [True, False],
+    "microbatches": [1, 2, 4],
+}
+
+_TRAIN_ONLY = {"loss_chunk", "microbatches", "remat"}
+
+
+def genome_keys(kind: str) -> list[str]:
+    keys = list(GENOME_SPACE)
+    if kind != "train":
+        keys = [k for k in keys if k not in _TRAIN_ONLY]
+    return keys
+
+
+def default_genome(cfg, kind: str) -> dict:
+    g = {"remat": cfg.remat, "attn_impl": cfg.attn_impl,
+         "attn_block": cfg.attn_block, "loss_chunk": cfg.loss_chunk,
+         "fsdp": cfg.fsdp, "microbatches": 1}
+    return {k: g[k] for k in genome_keys(kind)}
+
+
+def apply_genome(cfg, genome: dict):
+    micro = genome.get("microbatches", 1)
+    fields = {k: v for k, v in genome.items() if k != "microbatches"}
+    return cfg.scaled(**fields), micro
+
+
+class GevoShard:
+    def __init__(self, arch: str, shape: str, *, multi_pod: bool = False,
+                 pop_size: int = 6, n_elite: int = 3, seed: int = 0,
+                 verbose: bool = True):
+        from ..configs import SHAPES, get_config  # late: needs XLA_FLAGS set
+        self.arch, self.shape, self.multi_pod = arch, shape, multi_pod
+        self.cfg = get_config(arch)
+        self.kind = SHAPES[shape][2]
+        self.keys = genome_keys(self.kind)
+        self.pop_size = pop_size
+        self.n_elite = min(n_elite, pop_size)
+        self.rng = np.random.default_rng(seed)
+        self.verbose = verbose
+        self._cache: dict[tuple, tuple] = {}
+        self.records: list[dict] = []
+
+    # -- fitness: one XLA compile + roofline -------------------------------
+    def evaluate(self, genome: dict) -> tuple[float, float]:
+        key = tuple(genome[k] for k in self.keys)
+        if key in self._cache:
+            return self._cache[key]
+        from ..launch.dryrun import run_cell
+        cfg2, micro = apply_genome(self.cfg, genome)
+        rec = run_cell(self.arch, self.shape, self.multi_pod,
+                       cfg_override=cfg2, microbatches=micro)
+        if rec["status"] != "ok":
+            fit = (float("inf"), float("inf"))
+        else:
+            step_s = rec["roofline"]["step_s"]
+            mem = rec["memory"].get("temp_size_in_bytes", 0) / 1e9
+            fit = (step_s, mem)
+        self._cache[key] = fit
+        self.records.append({"genome": dict(genome), "fitness": fit,
+                             "rec": {k: rec.get(k) for k in
+                                     ("status", "compile_s", "roofline")}})
+        if self.verbose:
+            print(f"  eval {genome} -> step={fit[0]:.3f}s mem={fit[1]:.1f}GB",
+                  flush=True)
+        return fit
+
+    # -- variation ----------------------------------------------------------
+    def _mutate(self, genome: dict) -> dict:
+        g = dict(genome)
+        k = self.keys[int(self.rng.integers(len(self.keys)))]
+        choices = [c for c in GENOME_SPACE[k] if c != g[k]]
+        g[k] = choices[int(self.rng.integers(len(choices)))]
+        return g
+
+    def _crossover(self, a: dict, b: dict) -> dict:
+        return {k: (a[k] if self.rng.random() < 0.5 else b[k])
+                for k in self.keys}
+
+    def run(self, generations: int = 4):
+        base = default_genome(self.cfg, self.kind)
+        pop = [base] + [self._mutate(base) for _ in range(self.pop_size - 1)]
+        fits = [self.evaluate(g) for g in pop]
+        for gen in range(generations):
+            objs = np.array(fits)
+            rank, crowd = rank_population(objs)
+            elites_idx = select_elites(objs, self.n_elite)
+            children = []
+            while len(children) < self.pop_size - len(elites_idx):
+                a = pop[tournament(self.rng, rank, crowd)]
+                b = pop[tournament(self.rng, rank, crowd)]
+                child = self._mutate(self._crossover(a, b))
+                children.append(child)
+            pop = [pop[i] for i in elites_idx] + children
+            fits = [self.evaluate(g) for g in pop]
+            if self.verbose:
+                best = min(fits)[0]
+                print(f"[gen {gen}] best step_s={best:.3f}", flush=True)
+        objs = np.array(fits)
+        pf = pareto_front(objs)
+        base_fit = self._cache[tuple(base[k] for k in self.keys)]
+        return {
+            "arch": self.arch, "shape": self.shape,
+            "baseline": {"genome": base, "fitness": base_fit},
+            "pareto": [{"genome": pop[i], "fitness": fits[i]} for i in pf],
+            "best_step": min((fits[i] for i in pf), key=lambda f: f[0]),
+            "n_compiles": len(self._cache),
+        }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--pop", type=int, default=6)
+    ap.add_argument("--generations", type=int, default=3)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    t0 = time.time()
+    s = GevoShard(args.arch, args.shape, multi_pod=args.multi_pod,
+                  pop_size=args.pop, seed=args.seed)
+    res = s.run(args.generations)
+    res["wall_s"] = round(time.time() - t0, 1)
+    res["records"] = s.records
+    print(json.dumps({k: v for k, v in res.items() if k != "records"},
+                     indent=1, default=str))
+    if args.out:
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+        json.dump(res, open(args.out, "w"), indent=1, default=str)
+
+
+if __name__ == "__main__":
+    os.environ.setdefault("XLA_FLAGS",
+                          "--xla_force_host_platform_device_count=512")
+    main()

@@ -1,0 +1,24 @@
+"""One-point messy crossover over the patch representation (Section 4.2).
+
+Concatenate two parents' edit lists, shuffle, cut at a random point, and
+reapply each half to the original program.  ~80% of recombinations were valid
+in the paper; invalid ones are retried by the caller.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from .mutation import Edit
+
+
+def messy_crossover(edits_a: list[Edit], edits_b: list[Edit],
+                    rng: np.random.Generator
+                    ) -> tuple[list[Edit], list[Edit]]:
+    pool = list(edits_a) + list(edits_b)
+    if not pool:
+        return [], []
+    order = rng.permutation(len(pool))
+    shuffled = [pool[i] for i in order]
+    cut = int(rng.integers(0, len(shuffled) + 1))
+    return shuffled[:cut], shuffled[cut:]

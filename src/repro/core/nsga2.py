@@ -1,0 +1,105 @@
+"""NSGA-II selection machinery (Deb et al. 2002), as used by GEVO-ML.
+
+Minimization on all objectives.  Provides fast non-dominated sorting,
+crowding distance, the crowded-comparison tournament, and the environmental
+selection used each generation (top-16 elites copied unchanged + tournament
+for the rest, per Section 4.4).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+def dominates(a, b) -> bool:
+    """a dominates b iff a <= b on all objectives and < on at least one."""
+    a, b = np.asarray(a), np.asarray(b)
+    return bool(np.all(a <= b) and np.any(a < b))
+
+
+def fast_non_dominated_sort(objs: np.ndarray) -> list[list[int]]:
+    """Return fronts (lists of indices), best front first."""
+    n = len(objs)
+    S = [[] for _ in range(n)]
+    counts = np.zeros(n, dtype=int)
+    fronts: list[list[int]] = [[]]
+    for p in range(n):
+        for q in range(n):
+            if p == q:
+                continue
+            if dominates(objs[p], objs[q]):
+                S[p].append(q)
+            elif dominates(objs[q], objs[p]):
+                counts[p] += 1
+        if counts[p] == 0:
+            fronts[0].append(p)
+    i = 0
+    while fronts[i]:
+        nxt = []
+        for p in fronts[i]:
+            for q in S[p]:
+                counts[q] -= 1
+                if counts[q] == 0:
+                    nxt.append(q)
+        i += 1
+        fronts.append(nxt)
+    return [f for f in fronts if f]
+
+
+def crowding_distance(objs: np.ndarray, front: list[int]) -> np.ndarray:
+    """Crowding distance for the members of one front."""
+    m = len(front)
+    dist = np.zeros(m)
+    if m <= 2:
+        return np.full(m, np.inf)
+    sub = objs[front]
+    for k in range(sub.shape[1]):
+        order = np.argsort(sub[:, k])
+        dist[order[0]] = dist[order[-1]] = np.inf
+        span = sub[order[-1], k] - sub[order[0], k]
+        if span <= 0:
+            continue
+        for j in range(1, m - 1):
+            dist[order[j]] += (sub[order[j + 1], k] - sub[order[j - 1], k]) / span
+    return dist
+
+
+def rank_population(objs: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    """Returns (rank, crowding) arrays; lower rank better, higher crowding
+    better within a rank."""
+    fronts = fast_non_dominated_sort(objs)
+    rank = np.zeros(len(objs), dtype=int)
+    crowd = np.zeros(len(objs))
+    for r, front in enumerate(fronts):
+        rank[front] = r
+        crowd[front] = crowding_distance(objs, front)
+    return rank, crowd
+
+
+def crowded_better(i: int, j: int, rank: np.ndarray, crowd: np.ndarray) -> bool:
+    if rank[i] != rank[j]:
+        return rank[i] < rank[j]
+    return crowd[i] > crowd[j]
+
+
+def tournament(rng: np.random.Generator, rank: np.ndarray,
+               crowd: np.ndarray, k: int = 2) -> int:
+    """k-way crowded tournament; returns the winning index."""
+    n = len(rank)
+    best = int(rng.integers(n))
+    for _ in range(k - 1):
+        cand = int(rng.integers(n))
+        if crowded_better(cand, best, rank, crowd):
+            best = cand
+    return best
+
+
+def select_elites(objs: np.ndarray, n_elite: int) -> list[int]:
+    """Indices of the n_elite best individuals by (rank, crowding)."""
+    rank, crowd = rank_population(objs)
+    order = sorted(range(len(objs)), key=lambda i: (rank[i], -crowd[i]))
+    return order[:n_elite]
+
+
+def pareto_front(objs: np.ndarray) -> list[int]:
+    return fast_non_dominated_sort(objs)[0]

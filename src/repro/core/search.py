@@ -1,0 +1,185 @@
+"""The GEVO-ML search loop (Section 4): NSGA-II over IR patches.
+
+Generation structure per the paper:
+  * initial population: copies of the original program with 3 random
+    mutations each;
+  * every generation: rank by (time, error), copy the top-16 elites
+    unchanged, fill the rest with offspring produced by one-point messy
+    crossover of tournament-selected parents followed by mutation;
+  * invalid variants (failed execution / un-applicable patches) are
+    resampled until a valid individual is found.
+
+Fitness values are cached by patch identity — patches are deterministic
+(each edit carries its own seed), so identical patches are identical
+programs.
+"""
+
+from __future__ import annotations
+
+import time as _time
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from .crossover import messy_crossover
+from .fitness import InvalidVariant
+from .mutation import Edit, EditError, apply_patch, random_edit
+from .nsga2 import pareto_front, rank_population, select_elites, tournament
+
+
+@dataclass(frozen=True)
+class Individual:
+    edits: tuple[Edit, ...]
+    fitness: tuple[float, float]  # (time, error) — minimized
+
+
+@dataclass
+class SearchResult:
+    original_fitness: tuple[float, float]
+    population: list[Individual]
+    pareto: list[Individual]
+    history: list[dict] = field(default_factory=list)
+
+    def best_by_time(self) -> Individual:
+        return min(self.pareto, key=lambda i: i.fitness[0])
+
+    def best_by_error(self) -> Individual:
+        return min(self.pareto, key=lambda i: i.fitness[1])
+
+
+class GevoML:
+    def __init__(self, workload, *, pop_size: int = 32, n_elite: int = 16,
+                 init_mutations: int = 3, crossover_rate: float = 0.8,
+                 mutation_rate: float = 0.5, max_tries: int = 40,
+                 seed: int = 0, verbose: bool = False):
+        self.w = workload
+        self.pop_size = pop_size
+        self.n_elite = min(n_elite, pop_size)
+        self.init_mutations = init_mutations
+        self.crossover_rate = crossover_rate
+        self.mutation_rate = mutation_rate
+        self.max_tries = max_tries
+        self.rng = np.random.default_rng(seed)
+        self.verbose = verbose
+        self._cache: dict[tuple[Edit, ...], tuple[float, float]] = {}
+        self.n_evals = 0
+        self.n_invalid = 0
+
+    # -- evaluation -----------------------------------------------------------
+    def _fitness(self, edits: tuple[Edit, ...]) -> tuple[float, float]:
+        if edits in self._cache:
+            return self._cache[edits]
+        program = apply_patch(self.w.program, list(edits))  # may raise EditError
+        fit = self.w.evaluate(program)                       # may raise InvalidVariant
+        self._cache[edits] = fit
+        self.n_evals += 1
+        return fit
+
+    def _try_individual(self, edits: list[Edit]) -> Individual | None:
+        try:
+            return Individual(tuple(edits), self._fitness(tuple(edits)))
+        except (EditError, InvalidVariant):
+            self.n_invalid += 1
+            return None
+
+    # -- variation ------------------------------------------------------------
+    def _mutate_edits(self, edits: list[Edit]) -> list[Edit] | None:
+        """Append one fresh random edit (sampled against the patched program,
+        so uids of earlier clones are addressable)."""
+        try:
+            prog = apply_patch(self.w.program, edits)
+        except EditError:
+            return None
+        for _ in range(4):
+            try:
+                e = random_edit(prog, self.rng)
+                new = edits + [e]
+                apply_patch(self.w.program, new)
+                return new
+            except EditError:
+                continue
+        return None
+
+    def _spawn_initial(self) -> Individual:
+        for _ in range(self.max_tries):
+            edits: list[Edit] = []
+            ok = True
+            for _ in range(self.init_mutations):
+                nxt = self._mutate_edits(edits)
+                if nxt is None:
+                    ok = False
+                    break
+                edits = nxt
+            if not ok:
+                continue
+            ind = self._try_individual(edits)
+            if ind is not None:
+                return ind
+        raise RuntimeError("could not build a valid initial individual")
+
+    def _spawn_offspring(self, pop: list[Individual], rank, crowd
+                         ) -> Individual:
+        for _ in range(self.max_tries):
+            a = pop[tournament(self.rng, rank, crowd)]
+            b = pop[tournament(self.rng, rank, crowd)]
+            if self.rng.random() < self.crossover_rate:
+                child_edits, alt = messy_crossover(
+                    list(a.edits), list(b.edits), self.rng)
+                if not child_edits and alt:
+                    child_edits = alt
+            else:
+                child_edits = list(a.edits)
+            if self.rng.random() < self.mutation_rate or not child_edits:
+                mutated = self._mutate_edits(child_edits)
+                if mutated is None:
+                    continue
+                child_edits = mutated
+            ind = self._try_individual(child_edits)
+            if ind is not None:
+                return ind
+        raise RuntimeError("could not build a valid offspring")
+
+    # -- main loop ------------------------------------------------------------
+    def run(self, generations: int = 10) -> SearchResult:
+        t0 = _time.perf_counter()
+        original = self.w.evaluate(self.w.program)
+        pop = [self._spawn_initial() for _ in range(self.pop_size)]
+        history = []
+        for gen in range(generations):
+            objs = np.array([i.fitness for i in pop])
+            rank, crowd = rank_population(objs)
+            elites = [pop[i] for i in select_elites(objs, self.n_elite)]
+            offspring = [self._spawn_offspring(pop, rank, crowd)
+                         for _ in range(self.pop_size - len(elites))]
+            pop = elites + offspring
+            objs = np.array([i.fitness for i in pop])
+            pf = pareto_front(objs)
+            history.append({
+                "gen": gen,
+                "best_time": float(objs[:, 0].min()),
+                "best_error": float(objs[:, 1].min()),
+                "pareto_size": len(pf),
+                "evals": self.n_evals,
+                "invalid": self.n_invalid,
+                "wall_s": _time.perf_counter() - t0,
+            })
+            if self.verbose:
+                h = history[-1]
+                print(f"[gen {gen:3d}] time={h['best_time']:.3e} "
+                      f"err={h['best_error']:.4f} pareto={h['pareto_size']} "
+                      f"evals={h['evals']} invalid={h['invalid']}")
+        objs = np.array([i.fitness for i in pop])
+        pf = [pop[i] for i in pareto_front(objs)]
+        # de-duplicate pareto members by fitness
+        seen, pareto = set(), []
+        for ind in sorted(pf, key=lambda i: i.fitness):
+            if ind.fitness not in seen:
+                seen.add(ind.fitness)
+                pareto.append(ind)
+        return SearchResult(original_fitness=original, population=pop,
+                            pareto=pareto, history=history)
+
+
+def describe_patch(edits: tuple[Edit, ...]) -> str:
+    """Human-readable mutation analysis line (Sections 6.1/6.2 style)."""
+    return "; ".join(str(e) for e in edits) or "<original>"

@@ -1,0 +1,99 @@
+"""Persistence for GEVO-ML artifacts: IR programs and patch genomes.
+
+A production deployment needs to ship the winning variant: searches run for
+days and their outputs (the Pareto front of patches + the original program)
+must survive restarts and be re-appliable elsewhere.  Programs serialize to
+JSON with constants in an npz sidecar (weights are large); patches are pure
+JSON (they carry their own RNG seeds, so re-application is deterministic).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+
+from .ir import Operation, Program, TensorType
+from .mutation import Edit
+
+
+def save_program(program: Program, path: str) -> None:
+    """Write <path>.json (structure) + <path>.npz (constant payloads)."""
+    consts: dict[str, np.ndarray] = {}
+    ops = []
+    for i, op in enumerate(program.ops):
+        attrs = {}
+        for k, v in op.attrs.items():
+            if isinstance(v, np.ndarray):
+                key = f"c{i}_{k}"
+                consts[key] = v
+                attrs[k] = {"__npz__": key}
+            else:
+                attrs[k] = v
+        ops.append({"opcode": op.opcode, "operands": list(op.operands),
+                    "attrs": attrs, "result": op.result,
+                    "type": [list(op.type.shape), op.type.dtype],
+                    "uid": op.uid})
+    doc = {
+        "name": program.name,
+        "inputs": [[n, v, [list(t.shape), t.dtype]]
+                   for n, v, t in program.inputs],
+        "ops": ops,
+        "outputs": list(program.outputs),
+        "next_value": program._next_value,
+        "next_uid": program._next_uid,
+    }
+    with open(path + ".json", "w") as f:
+        json.dump(doc, f)
+    np.savez(path + ".npz", **consts)
+
+
+def _fix(v):
+    """JSON round-trip turns tuples into lists; attrs must be hashable-ish."""
+    if isinstance(v, list):
+        return tuple(_fix(x) for x in v)
+    return v
+
+
+def load_program(path: str) -> Program:
+    doc = json.load(open(path + ".json"))
+    consts = np.load(path + ".npz") if os.path.exists(path + ".npz") else {}
+    prog = Program(name=doc["name"])
+    prog.inputs = [(n, v, TensorType(tuple(t[0]), t[1]))
+                   for n, v, t in doc["inputs"]]
+    for o in doc["ops"]:
+        attrs = {}
+        for k, v in o["attrs"].items():
+            if isinstance(v, dict) and "__npz__" in v:
+                attrs[k] = consts[v["__npz__"]]
+            else:
+                attrs[k] = _fix(v)
+        prog.ops.append(Operation(
+            opcode=o["opcode"], operands=list(o["operands"]), attrs=attrs,
+            result=o["result"],
+            type=TensorType(tuple(o["type"][0]), o["type"][1]),
+            uid=o["uid"]))
+    prog.outputs = list(doc["outputs"])
+    prog._next_value = doc["next_value"]
+    prog._next_uid = doc["next_uid"]
+    prog.verify()
+    return prog
+
+
+def save_patches(patches: list[tuple[Edit, ...]], path: str,
+                 fitnesses: list[tuple] | None = None) -> None:
+    doc = [{"edits": [{"kind": e.kind, "target_uid": e.target_uid,
+                       "dest_uid": e.dest_uid, "seed": e.seed}
+                      for e in patch],
+            "fitness": list(fitnesses[i]) if fitnesses else None}
+           for i, patch in enumerate(patches)]
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=1)
+
+
+def load_patches(path: str) -> list[tuple[Edit, ...]]:
+    doc = json.load(open(path))
+    return [tuple(Edit(kind=e["kind"], target_uid=e["target_uid"],
+                       dest_uid=e["dest_uid"], seed=e["seed"])
+                  for e in p["edits"]) for p in doc]

@@ -1,0 +1,1 @@
+from .tokens import TokenPipeline  # noqa: F401

@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the perf-critical compute of the assigned
+architectures: flash attention (train/prefill), the mamba selective scan,
+and fused RMSNorm.  (The paper itself contributes a search tool, not a
+kernel; these kernels are the perf-critical substrate of the workloads the
+framework runs, used by the beyond-paper perf pass.)
+
+Each kernel directory holds:
+  <name>.py -- the pl.pallas_call kernel with explicit BlockSpec VMEM tiling
+  ops.py    -- the jit'd public wrapper (interpret=True on CPU hosts)
+  ref.py    -- the pure-jnp oracle the tests assert against
+"""

@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for flash attention."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal: bool = True, scale: float | None = None):
+    """q, k, v: (B, H, S, hd) -> (B, H, Sq, hd), fp32 softmax."""
+    hd = q.shape[-1]
+    scale = scale if scale is not None else hd ** -0.5
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if causal:
+        Sq, Sk = s.shape[-2:]
+        qi = jax.lax.broadcasted_iota(jnp.int32, (Sq, Sk), 0)
+        kj = jax.lax.broadcasted_iota(jnp.int32, (Sq, Sk), 1)
+        s = jnp.where(kj <= qi, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)

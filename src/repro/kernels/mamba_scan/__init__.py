@@ -1,0 +1,1 @@
+from .ops import mamba_scan  # noqa: F401

@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for the mamba1 selective scan."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import lax
+
+
+def mamba_scan_ref(dt, x, A, B, C):
+    """dt, x: (Bt, L, D); A: (D, N); B, C: (Bt, L, N) -> y (Bt, L, D)."""
+    dt32 = dt.astype(jnp.float32)
+    x32 = x.astype(jnp.float32)
+    a = jnp.exp(dt32[..., None] * A)                        # (Bt, L, D, N)
+    b = (dt32 * x32)[..., None] * B.astype(jnp.float32)[:, :, None, :]
+
+    def step(h, ab):
+        a_t, b_t, c_t = ab
+        h = a_t * h + b_t
+        return h, jnp.sum(h * c_t[:, None, :], axis=-1)
+
+    Bt, L, D = x.shape
+    h0 = jnp.zeros((Bt, D, A.shape[1]), jnp.float32)
+    _, ys = lax.scan(step, h0,
+                     (a.swapaxes(0, 1), b.swapaxes(0, 1),
+                      C.astype(jnp.float32).swapaxes(0, 1)))
+    return ys.swapaxes(0, 1).astype(x.dtype)

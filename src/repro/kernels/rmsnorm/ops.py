@@ -1,0 +1,20 @@
+"""Public jit'd wrapper for the fused RMSNorm kernel."""
+
+from functools import partial
+
+import jax
+
+from .rmsnorm import rmsnorm_fwd
+
+
+def _on_tpu() -> bool:
+    return any(d.platform == "tpu" for d in jax.devices())
+
+
+@partial(jax.jit, static_argnames=("eps", "block_rows"))
+def rmsnorm(x, scale, *, eps: float = 1e-6, block_rows: int = 128):
+    """x: (..., d) -> fused rms-normalized x * scale."""
+    shape = x.shape
+    y = rmsnorm_fwd(x.reshape(-1, shape[-1]), scale, eps=eps,
+                    block_rows=block_rows, interpret=not _on_tpu())
+    return y.reshape(shape)

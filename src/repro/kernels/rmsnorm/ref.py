@@ -1,0 +1,10 @@
+"""Pure-jnp oracle for fused RMSNorm."""
+
+import jax
+import jax.numpy as jnp
+
+
+def rmsnorm_ref(x, scale, eps: float = 1e-6):
+    x32 = x.astype(jnp.float32)
+    y = x32 * jax.lax.rsqrt(jnp.mean(x32 * x32, -1, keepdims=True) + eps)
+    return (y * scale.astype(jnp.float32)).astype(x.dtype)

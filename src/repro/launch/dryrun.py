@@ -1,0 +1,134 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any other import (jax locks the device
+# count at first init).  Everything below is ordinary.
+
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape) cell
+on the production meshes, record memory/cost analysis and the three-term
+roofline, and fail loudly on any sharding/compile error.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch all --shape all \
+      --mesh both --out experiments/dryrun
+"""
+
+import argparse  # noqa: E402
+import json  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+
+import jax  # noqa: E402
+
+from ..configs import ARCHS, SHAPES, get_config, runnable_cells  # noqa: E402
+from .hlo_analysis import analyze  # noqa: E402
+from .mesh import make_production_mesh  # noqa: E402
+from .roofline import roofline  # noqa: E402
+from .specs import make_cell  # noqa: E402
+
+
+def _memory_stats(compiled) -> dict:
+    try:
+        ma = compiled.memory_analysis()
+        return {k: int(getattr(ma, k)) for k in (
+            "argument_size_in_bytes", "output_size_in_bytes",
+            "temp_size_in_bytes", "generated_code_size_in_bytes")
+            if hasattr(ma, k)}
+    except Exception as e:  # backend may not implement it
+        return {"error": str(e)}
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool,
+             cfg_override=None, microbatches: int = 1,
+             keep_text: bool = False) -> dict:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = mesh.devices.size
+    rec = {"arch": arch, "shape": shape,
+           "mesh": "2x16x16" if multi_pod else "16x16", "devices": n_dev}
+    t0 = time.time()
+    try:
+        cell = make_cell(arch, shape, mesh, cfg_override=cfg_override,
+                         microbatches=microbatches)
+        lowered = cell.fn.lower(*cell.args)
+        t1 = time.time()
+        compiled = lowered.compile()
+        t2 = time.time()
+        rec["status"] = "ok"
+        rec["lower_s"] = round(t1 - t0, 2)
+        rec["compile_s"] = round(t2 - t1, 2)
+        rec["memory"] = _memory_stats(compiled)
+        ca = compiled.cost_analysis() or {}
+        rec["xla_cost"] = {"flops": ca.get("flops"),
+                           "bytes": ca.get("bytes accessed")}
+        text = compiled.as_text()
+        costs = analyze(text, n_dev)
+        rec["hlo"] = {
+            "flops_bf16": costs.flops_bf16, "flops_f32": costs.flops_f32,
+            "hbm_bytes": costs.hbm_bytes,
+            "collective_bytes": dict(costs.collective_bytes),
+            "n_collective_ops": costs.n_collective_ops,
+            "text_len": len(text),
+        }
+        rl = roofline(costs, cell.cfg, shape, n_dev)
+        rec["roofline"] = rl.to_dict()
+        if keep_text:
+            rec["hlo_text"] = text
+    except Exception as e:
+        rec["status"] = "FAIL"
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+    rec["wall_s"] = round(time.time() - t0, 2)
+    return rec
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--list", action="store_true")
+    args = ap.parse_args()
+
+    cells = runnable_cells()
+    if args.arch != "all":
+        cells = [c for c in cells if c[0] == args.arch]
+    if args.shape != "all":
+        cells = [c for c in cells if c[1] == args.shape]
+    if args.list:
+        for a, s in cells:
+            print(a, s)
+        return 0
+
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    os.makedirs(args.out, exist_ok=True)
+    failures = 0
+    for arch, shape in cells:
+        for multi in meshes:
+            tag = f"{arch}_{shape}_{'multi' if multi else 'single'}"
+            path = os.path.join(args.out, tag + ".json")
+            if os.path.exists(path):
+                rec = json.load(open(path))
+                if rec.get("status") == "ok":
+                    print(f"[skip] {tag} (cached ok)")
+                    continue
+            rec = run_cell(arch, shape, multi,
+                           microbatches=args.microbatches)
+            with open(path, "w") as f:
+                json.dump(rec, f, indent=1)
+            if rec["status"] == "ok":
+                rl = rec["roofline"]
+                print(f"[ok]   {tag:60s} compile={rec['compile_s']:7.1f}s "
+                      f"dom={rl['dominant']:10s} "
+                      f"frac={rl['roofline_fraction']:.3f}")
+            else:
+                failures += 1
+                print(f"[FAIL] {tag}: {rec['error'][:200]}")
+    print(f"done: {failures} failures")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

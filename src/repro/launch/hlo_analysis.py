@@ -1,0 +1,339 @@
+"""Roofline-term extraction from compiled (post-SPMD) HLO text.
+
+``compiled.cost_analysis()`` counts a ``while`` body ONCE regardless of trip
+count (verified empirically), which under-counts scan-over-layers models by
+``n_layers``x.  This analyzer re-derives the three roofline terms from
+``compiled.as_text()`` with correct loop multipliers:
+
+* parse every computation block + its ops (result/operand shapes, attrs);
+* build the call graph; ``while`` edges carry the loop trip count (read from
+  the integer ``constant(N)`` in the loop condition), fusion/branch edges x1;
+* walk from ENTRY accumulating multipliers and summing
+    - dot FLOPs (2 x result x contracted), split by dtype (bf16 vs f32),
+    - HBM bytes: operands+result of top-level (non-fusion-internal) ops —
+      fusion internals are register/VMEM-resident,
+    - collective wire bytes, with ring-algorithm factors
+      (all-reduce 2(g-1)/g, all-gather/reduce-scatter/all-to-all (g-1)/g,
+      collective-permute 1) from the op's replica-group size.
+
+All shapes in post-SPMD HLO are PER-DEVICE shapes, so every number reported
+here is per device per step.
+"""
+
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {"pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2,
+                "bf16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+                "f64": 8, "c64": 8, "c128": 16, "token": 0, "s4": 1, "u4": 1}
+
+_SHAPE_RE = re.compile(r"(pred|bf16|f16|f32|f64|s4|u4|s8|u8|s16|u16|s32|u32"
+                       r"|s64|u64|c64|c128|token)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(.+?)\s+([a-z][a-z0-9\-\.]*)\((.*)$")
+_COMP_RE = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\((.*)\)\s*->.*\{\s*$")
+_CALL_ATTRS = ("calls", "to_apply", "body", "condition")
+
+COLLECTIVES = {
+    "all-reduce": "all_reduce", "all-reduce-start": "all_reduce",
+    "all-gather": "all_gather", "all-gather-start": "all_gather",
+    "reduce-scatter": "reduce_scatter",
+    "all-to-all": "all_to_all", "ragged-all-to-all": "all_to_all",
+    "collective-permute": "collective_permute",
+    "collective-permute-start": "collective_permute",
+}
+_SKIP_BYTES = {"parameter", "constant", "get-tuple-element", "tuple",
+               "bitcast", "after-all", "while", "conditional", "call",
+               "all-reduce-done", "all-gather-done",
+               "collective-permute-done", "copy-start", "copy-done"}
+
+
+def _shapes_bytes(type_str: str) -> tuple[int, dict[str, int]]:
+    """Total bytes and per-dtype element counts for a (possibly tuple) type."""
+    total = 0
+    elems: dict[str, int] = defaultdict(int)
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+        elems[dt] += n
+    return total, elems
+
+
+@dataclass
+class Op:
+    name: str
+    opcode: str
+    type_str: str
+    operands: list[str]
+    attrs_str: str
+    operand_str: str = ""
+
+
+@dataclass
+class Computation:
+    name: str
+    is_entry: bool
+    params: dict[str, str] = field(default_factory=dict)  # name -> type str
+    ops: list[Op] = field(default_factory=list)
+    defs: dict[str, str] = field(default_factory=dict)    # name -> type str
+
+
+def parse_hlo(text: str) -> dict[str, Computation]:
+    comps: dict[str, Computation] = {}
+    cur: Computation | None = None
+    entry_name = None
+    for line in text.splitlines():
+        m = _COMP_RE.match(line)
+        if m and ("->" in line):
+            cur = Computation(name=m.group(2), is_entry=bool(m.group(1)))
+            if cur.is_entry:
+                entry_name = cur.name
+            # params from header: "name: f32[2,64], name2: ..."
+            for pm in re.finditer(r"([\w\.\-]+):\s*((?:\([^)]*\)|[\w\[\],\{\}]+))",
+                                  m.group(3)):
+                cur.params[pm.group(1)] = pm.group(2)
+                cur.defs[pm.group(1)] = pm.group(2)
+            comps[cur.name] = cur
+            continue
+        if cur is None:
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        om = _OP_RE.match(line)
+        if om:
+            name, type_str, opcode, rest = om.groups()
+            # split rest at the closing paren of the operand list
+            depth, i = 1, 0
+            while i < len(rest) and depth:
+                if rest[i] == "(":
+                    depth += 1
+                elif rest[i] == ")":
+                    depth -= 1
+                i += 1
+            operand_str, attrs = rest[:i - 1], rest[i:]
+            ops_names = re.findall(r"%([\w\.\-]+)", operand_str)
+            cur.ops.append(Op(name, opcode, type_str, ops_names, attrs,
+                              operand_str))
+            cur.defs[name] = type_str
+    if entry_name is not None:
+        comps["__entry__"] = comps[entry_name]
+    return comps
+
+
+def _trip_count(cond: Computation) -> int:
+    """Loop trips from the condition's integer constant (scan bound)."""
+    best = 1
+    for op in cond.ops:
+        if op.opcode == "constant":
+            mm = re.match(r"^(\d+)\s*$", op.operand_str.strip())
+            if mm:
+                best = max(best, int(mm.group(1)))
+    return best
+
+
+def _called(op: Op) -> list[tuple[str, str]]:
+    """(attr, computation_name) pairs this op calls."""
+    out = []
+    for attr in _CALL_ATTRS:
+        for m in re.finditer(attr + r"=%?([\w\.\-]+)", op.attrs_str):
+            out.append((attr, m.group(1)))
+    for m in re.finditer(r"branch_computations=\{([^}]*)\}", op.attrs_str):
+        for name in re.findall(r"%?([\w\.\-]+)", m.group(1)):
+            out.append(("branch", name))
+    return out
+
+
+def _group_size(attrs: str, n_devices: int) -> int:
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", attrs)
+    if m:
+        return int(m.group(2))
+    m = re.search(r"replica_groups=\{\{([^}]*)\}", attrs)
+    if m:
+        return len([t for t in m.group(1).split(",") if t.strip()])
+    return n_devices
+
+
+@dataclass
+class HloCosts:
+    flops_bf16: float = 0.0
+    flops_f32: float = 0.0
+    hbm_bytes: float = 0.0
+    collective_bytes: dict[str, float] = field(
+        default_factory=lambda: defaultdict(float))
+    n_collective_ops: int = 0
+
+    @property
+    def flops(self) -> float:
+        return self.flops_bf16 + self.flops_f32
+
+    @property
+    def total_collective_bytes(self) -> float:
+        return sum(self.collective_bytes.values())
+
+
+# Working-set threshold for the VMEM-residency model: loop-body temporaries
+# whose operands+result fit on-chip are assumed fused/resident (this is what
+# the Pallas kernels guarantee on TPU for the streaming attention/scan inner
+# loops); their HBM traffic is the dynamic-slice streaming only.
+VMEM_BUDGET = 64 * 1024 * 1024
+
+
+def _slice_aware_bytes(op: Op, comp: Computation,
+                       comps: dict[str, Computation]
+                       ) -> tuple[float, float]:
+    """HBM traffic of one top-level op, split as (slice_traffic, other).
+
+    * slice_traffic — dynamic-slice / dynamic-update-slice bytes (including
+      fused ones): these touch only the slice, not the whole buffer (scan
+      carries / ys-accumulators / KV caches alias in place), and they are
+      ALWAYS real HBM reads/writes of the streamed block.
+    * other — operand+result bytes of the remaining computation; callers
+      may zero this for small loop-body temporaries (VMEM residency)."""
+    rb, _ = _shapes_bytes(op.type_str)
+    ob_each = [(_shapes_bytes(comp.defs.get(o, ""))[0], o)
+               for o in op.operands]
+    if op.opcode == "dynamic-slice":
+        return 2.0 * rb, 0.0
+    if op.opcode == "dynamic-update-slice":
+        ub = ob_each[1][0] if len(ob_each) > 1 else rb
+        return 2.0 * ub, 0.0
+    if op.opcode == "fusion":
+        interior = None
+        for attr, nm in _called(op):
+            if attr == "calls" and nm in comps:
+                interior = comps[nm]
+                break
+        if interior is not None:
+            slice_srcs: set[int] = set()   # operand indices aliased by slices
+            traffic = 0.0
+            has_dus_root = False
+            pnames = list(interior.params.keys())
+
+            def _pidx(name: str) -> int | None:
+                d = interior.defs.get(name, "")
+                # map interior value back to a fusion parameter index
+                for iop in interior.ops:
+                    if iop.name == name and iop.opcode == "parameter":
+                        m = re.match(r"^(\d+)", iop.operand_str.strip())
+                        if m:
+                            return int(m.group(1))
+                if name in pnames:
+                    return pnames.index(name)
+                return None
+
+            for iop in interior.ops:
+                if iop.opcode == "dynamic-slice":
+                    srb, _ = _shapes_bytes(iop.type_str)
+                    traffic += 2.0 * srb
+                    if iop.operands:
+                        idx = _pidx(iop.operands[0])
+                        if idx is not None:
+                            slice_srcs.add(idx)
+                elif iop.opcode == "dynamic-update-slice":
+                    ub = _shapes_bytes(
+                        interior.defs.get(iop.operands[1], ""))[0] \
+                        if len(iop.operands) > 1 else 0
+                    traffic += 2.0 * ub
+                    has_dus_root = True
+                    if iop.operands:
+                        idx = _pidx(iop.operands[0])
+                        if idx is not None:
+                            slice_srcs.add(idx)
+            if slice_srcs or has_dus_root:
+                ob = sum(b for i, (b, _) in enumerate(ob_each)
+                         if i not in slice_srcs)
+                return traffic, ob + (0.0 if has_dus_root else rb)
+    return 0.0, rb + sum(b for b, _ in ob_each)
+
+
+def _dot_flops(op: Op, comp: Computation) -> tuple[float, str]:
+    out_bytes, out_elems = _shapes_bytes(op.type_str)
+    elems = sum(out_elems.values())
+    dtype = max(out_elems, key=out_elems.get) if out_elems else "f32"
+    contract = 1
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.attrs_str)
+    if m and op.operands:
+        lhs_type = comp.defs.get(op.operands[0], "")
+        sm = _SHAPE_RE.search(lhs_type)
+        if sm:
+            dims = [int(d) for d in sm.group(2).split(",") if d]
+            for ci in m.group(1).split(","):
+                if ci and int(ci) < len(dims):
+                    contract *= dims[int(ci)]
+    return 2.0 * elems * contract, ("bf16" if dtype in ("bf16", "f16")
+                                    else "f32")
+
+
+def analyze(text: str, n_devices: int) -> HloCosts:
+    comps = parse_hlo(text)
+    entry = comps.get("__entry__")
+    if entry is None:
+        raise ValueError("no ENTRY computation found")
+    costs = HloCosts()
+    # memoized walk: (computation) -> visited with multiplier accumulation
+    seen_stack: set[str] = set()
+
+    def walk(comp: Computation, mult: float, top_level: bool,
+             loop_depth: int = 0):
+        if comp.name in seen_stack:
+            return  # recursion guard
+        seen_stack.add(comp.name)
+        for op in comp.ops:
+            oc = op.opcode
+            if oc == "dot":
+                f, dt = _dot_flops(op, comp)
+                if dt == "bf16":
+                    costs.flops_bf16 += f * mult
+                else:
+                    costs.flops_f32 += f * mult
+            elif oc == "convolution":
+                out_b, out_e = _shapes_bytes(op.type_str)
+                costs.flops_f32 += 2.0 * sum(out_e.values()) * mult  # approx
+            if oc in COLLECTIVES:
+                payload, _ = _shapes_bytes(op.type_str)
+                g = _group_size(op.attrs_str, n_devices)
+                kind = COLLECTIVES[oc]
+                if kind == "all_reduce":
+                    wire = 2.0 * (g - 1) / g * payload
+                elif kind == "collective_permute":
+                    wire = payload
+                else:
+                    wire = (g - 1) / g * payload
+                costs.collective_bytes[kind] += wire * mult
+                costs.n_collective_ops += 1
+                costs.hbm_bytes += payload * mult
+            elif top_level and oc not in _SKIP_BYTES:
+                slice_b, other_b = _slice_aware_bytes(op, comp, comps)
+                if loop_depth >= 1 and other_b <= VMEM_BUDGET:
+                    other_b = 0.0  # fused/VMEM-resident loop-body temporary
+                costs.hbm_bytes += (slice_b + other_b) * mult
+            # descend
+            if oc == "while":
+                body = cond = None
+                for attr, name in _called(op):
+                    if attr == "body":
+                        body = name
+                    elif attr == "condition":
+                        cond = name
+                trip = _trip_count(comps[cond]) if cond in comps else 1
+                if body in comps:
+                    walk(comps[body], mult * trip, True, loop_depth + 1)
+            elif oc == "fusion":
+                for attr, name in _called(op):
+                    if attr == "calls" and name in comps:
+                        walk(comps[name], mult, False, loop_depth)
+            elif oc in ("conditional", "call", "custom-call"):
+                for attr, name in _called(op):
+                    if attr in ("branch", "calls", "to_apply") and name in comps:
+                        walk(comps[name], mult, True, loop_depth)
+        seen_stack.discard(comp.name)
+
+    walk(entry, 1.0, True)
+    return costs

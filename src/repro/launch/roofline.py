@@ -1,0 +1,71 @@
+"""Three-term roofline report from analyzed HLO costs.
+
+Hardware constants: TPU v5e — 197 TFLOP/s bf16 per chip (f32 at half rate),
+819 GB/s HBM, ~50 GB/s per ICI link.  All costs from hlo_analysis are
+per-device per-step, so terms are seconds per step on one chip.
+"""
+
+from __future__ import annotations
+
+from dataclasses import asdict, dataclass
+
+from ..configs import SHAPES
+from ..models.common import ModelConfig
+from .hlo_analysis import HloCosts
+
+PEAK_BF16 = 197e12
+PEAK_F32 = PEAK_BF16 / 2
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+
+@dataclass
+class Roofline:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    model_flops_per_dev: float
+    hlo_flops_per_dev: float
+    useful_ratio: float       # MODEL_FLOPS / HLO_FLOPs
+    step_s: float             # max of the three terms (perfect overlap bound)
+    roofline_fraction: float  # compute_s / step_s (1.0 = compute-bound at peak)
+
+    def to_dict(self):
+        return asdict(self)
+
+
+def model_flops(cfg: ModelConfig, shape_name: str) -> float:
+    """Global MODEL_FLOPS per step: 6*N_active*D for training, 2*N_active*D
+    for inference (D = tokens processed)."""
+    seq, batch, kind = SHAPES[shape_name]
+    n = cfg.active_param_count()
+    if kind == "train":
+        return 6.0 * n * seq * batch
+    if kind == "prefill":
+        return 2.0 * n * seq * batch
+    return 2.0 * n * batch  # decode: one token per sequence
+
+
+def roofline(costs: HloCosts, cfg: ModelConfig, shape_name: str,
+             n_devices: int) -> Roofline:
+    # NOTE: the CPU backend upcasts bf16 dots to f32 during lowering, so the
+    # HLO dtype split misclassifies matmuls that run in bf16 on the TPU
+    # target.  Compute is therefore priced at the bf16 peak; the raw
+    # bf16/f32 split is still recorded in the cell json for reference.
+    compute_s = costs.flops / PEAK_BF16
+    memory_s = costs.hbm_bytes / HBM_BW
+    collective_s = costs.total_collective_bytes / ICI_BW
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(cfg, shape_name) / n_devices
+    step = max(terms.values())
+    return Roofline(
+        compute_s=compute_s, memory_s=memory_s, collective_s=collective_s,
+        dominant=dominant,
+        model_flops_per_dev=mf,
+        hlo_flops_per_dev=costs.flops,
+        useful_ratio=mf / costs.flops if costs.flops else 0.0,
+        step_s=step,
+        roofline_fraction=(mf / PEAK_BF16) / step if step else 0.0)

@@ -1,0 +1,190 @@
+"""Sharding policy: PartitionSpecs for params, optimizer state, batches and
+decode caches, for any (config x mesh).
+
+Strategy (the paper-faithful *baseline* — GEVO-Shard hillclimbs from here):
+
+* TP over ``model``: attention heads, FFN hidden, expert dim (EP), mamba
+  d_inner, vocab of the embedding tables.
+* DP/FSDP over ``data`` (+``pod``): batch dim of activations; the non-model
+  dim of every large weight is additionally sharded over the DP axes
+  (ZeRO-3 style; GSPMD inserts the all-gathers).
+* Divisibility fallback: if a rule's axis does not divide the dim (e.g.
+  minicpm's 36 heads on a 16-way axis), the axis moves to the largest
+  remaining divisible dim; if none fits, it is dropped (replicated).
+
+Optimizer-state leaves inherit the spec of the param they track (exact
+path-based lookup; adafactor's factored r/c drop the reduced dim's axis).
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..models.common import ModelConfig
+
+# rules: leaf-name -> intent over TRAILING dims ("fsdp" -> DP axes tuple,
+# "model" -> model axis).  A leading stacked-layer dim is auto-None.
+_RULES: dict[str, tuple] = {
+    "embed": ("model", None),
+    "out": ("fsdp", "model"),
+    "wq": ("fsdp", "model", None),
+    "wk": ("fsdp", "model", None),
+    "wv": ("fsdp", "model", None),
+    "wo": ("model", None, "fsdp"),
+    "bq": ("model", None), "bk": ("model", None), "bv": ("model", None),
+    "wq_a": ("fsdp", None),
+    "wq_b": (None, "model", None),
+    "wkv_a": ("fsdp", None),
+    "wkv_b": (None, "model", None),
+    "gate": ("fsdp", "model"),
+    "up": ("fsdp", "model"),
+    "down": ("model", "fsdp"),
+    "router": (None, None),
+    "w_gate": ("model", "fsdp", None),
+    "w_up": ("model", "fsdp", None),
+    "w_down": ("model", None, "fsdp"),
+    "sh_gate": ("fsdp", "model"),
+    "sh_up": ("fsdp", "model"),
+    "sh_down": ("model", "fsdp"),
+    "in_proj": ("fsdp", "model"),
+    "conv_w": (None, "model"),
+    "conv_b": ("model",),
+    "out_proj": ("model", "fsdp"),
+    "x_proj": ("model", None),
+    "dt_proj": (None, "model"),
+    "dt_w": ("fsdp", "model"),
+    "bc_proj": ("fsdp", None),
+    "D": ("model",),
+}
+
+
+def _leaf_name(path) -> str:
+    for entry in reversed(path):
+        key = getattr(entry, "key", None) or getattr(entry, "name", None)
+        if key in ("r", "c", "v", "m", "f", "mom"):
+            continue
+        if key is not None:
+            return str(key)
+    return ""
+
+
+def _axis_sizes(mesh, dp_axes, model_axis):
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    dp = int(np.prod([sizes[a] for a in dp_axes])) if dp_axes else 1
+    return dp, sizes[model_axis]
+
+
+# attention projections must keep q/k/v head shardings aligned: relocating
+# the model axis onto head_dim for one of them desynchronizes the pair and
+# forces SPMD full-rematerialization.  These fall back to replicated instead.
+_NO_RELOCATE = {"wq", "wk", "wv", "wo", "bq", "bk", "bv", "wq_b", "wkv_b"}
+
+
+def _fit(intent: tuple, shape: tuple, dp_axes, model_axis, dp_size,
+         model_size, min_fsdp_elems: int = 1 << 18,
+         allow_relocate: bool = True) -> P:
+    """Turn a trailing-dim intent into a valid PartitionSpec for ``shape``.
+
+    Applies divisibility checks and the fallback relocation of the model
+    axis described in the module docstring."""
+    nd = len(shape)
+    intent = tuple(intent)
+    if len(intent) < nd:                       # leading stacked-layer dims
+        intent = (None,) * (nd - len(intent)) + intent
+    elif len(intent) > nd:                     # e.g. adafactor r/c leaves
+        intent = intent[-nd:] if nd else ()
+    spec: list = [None] * nd
+    small = int(np.prod(shape)) < min_fsdp_elems
+    model_placed = False
+    for i, want in enumerate(intent):
+        if want == "model" and shape[i] % model_size == 0:
+            spec[i] = model_axis
+            model_placed = True
+        elif want == "fsdp" and not small and shape[i] % dp_size == 0:
+            spec[i] = tuple(dp_axes)
+    if "model" in intent and not model_placed and allow_relocate:
+        # relocate: largest free dim divisible by the model axis
+        for i in sorted(range(nd), key=lambda j: -shape[j]):
+            if spec[i] is None and shape[i] % model_size == 0 and shape[i] > 1:
+                spec[i] = model_axis
+                break
+    return P(*spec)
+
+
+def param_specs(params_or_shapes: Any, mesh, dp_axes=("data",),
+                model_axis: str = "model", fsdp: bool = True):
+    """PartitionSpec pytree for a params (or opt-state) pytree."""
+    dp_size, model_size = _axis_sizes(mesh, dp_axes if fsdp else (), model_axis)
+    flat, tdef = jax.tree_util.tree_flatten_with_path(params_or_shapes)
+    out = []
+    for path, leaf in flat:
+        name = _leaf_name(path)
+        keys = [str(getattr(e, "key", getattr(e, "name", ""))) for e in path]
+        intent = _RULES.get(name)
+        shape = tuple(leaf.shape)
+        if intent is None or not shape:
+            out.append(P())
+            continue
+        # factored adafactor leaves: r drops the last dim, c the 2nd-last
+        if keys and keys[-1] == "r":
+            intent = intent[:-1]
+        elif keys and keys[-1] == "c":
+            intent = intent[:-2] + intent[-1:]
+        out.append(_fit(intent, shape, dp_axes if fsdp else (), model_axis,
+                        dp_size, model_size,
+                        allow_relocate=name not in _NO_RELOCATE))
+    return jax.tree_util.tree_unflatten(tdef, out)
+
+
+def batch_specs(cfg: ModelConfig, batch_shapes: dict, dp_axes=("data",),
+                model_axis: str = "model", dp_size: int = 1):
+    """Specs for a train/prefill batch dict: batch dim over DP axes (when
+    divisible), sequence dim over the model axis for long sequences."""
+    out = {}
+    for k, v in batch_shapes.items():
+        shape = tuple(v.shape)
+        b_ax = tuple(dp_axes) if shape[0] % dp_size == 0 else None
+        spec = [b_ax] + [None] * (len(shape) - 1)
+        out[k] = P(*spec)
+    return out
+
+
+def cache_specs(cfg: ModelConfig, cache_shapes: dict, dp_axes=("data",),
+                model_axis: str = "model", dp_size: int = 1,
+                model_size: int = 1):
+    """Decode-cache specs: batch over DP; KV heads over model when they
+    divide, otherwise the sequence dim over model (flash-decode style —
+    the softmax reduction over the sharded seq dim becomes an all-reduce)."""
+    out = {}
+    for k, v in cache_shapes.items():
+        shape = tuple(v.shape)          # leading L (or G) stacked dim
+        spec = [None] * len(shape)
+        if shape[1] % dp_size == 0 and shape[1] > 1:
+            spec[1] = tuple(dp_axes)
+        if k in ("k", "v", "shared_k", "shared_v"):
+            if shape[3] % model_size == 0:          # KV heads
+                spec[3] = model_axis
+            elif shape[2] % model_size == 0:        # sequence
+                spec[2] = model_axis
+        elif k in ("ckv", "krope"):
+            if shape[2] % model_size == 0:          # sequence (MLA latent)
+                spec[2] = model_axis
+        elif k == "conv":                            # (L, B, K-1, d_inner)
+            if shape[-1] % model_size == 0:
+                spec[-1] = model_axis
+        elif k == "ssm":
+            # mamba1: (L, B, d_inner, n) -> d_inner; mamba2: (L, B, H, dh, n) -> H
+            dim = 2
+            if shape[dim] % model_size == 0:
+                spec[dim] = model_axis
+        out[k] = P(*spec)
+    return out
+
+
+def to_shardings(mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,141 @@
+"""ShapeDtypeStruct stand-ins for every model input — the dry-run never
+allocates real data.  ``make_cell`` assembles everything one (arch x shape)
+cell needs: the step function, abstract args, and their shardings."""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs import SHAPES, get_config
+from ..models.common import ModelConfig
+from ..models.transformer import (Dist, decode_step, init_cache, init_params,
+                                  prefill, train_loss)
+from ..optim.optimizers import adafactor, adamw
+from ..train.train_step import make_train_step
+from .mesh import mesh_axes
+from .shardings import batch_specs, cache_specs, param_specs, to_shardings
+
+_BF16 = jnp.bfloat16
+_I32 = jnp.int32
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def pick_optimizer(cfg: ModelConfig):
+    """Adafactor for >20B models (factored state is what fits HBM), AdamW
+    otherwise — see DESIGN.md memory math."""
+    if cfg.param_count() > 20e9:
+        return adafactor(lr=1e-2)
+    return adamw(lr=3e-4)
+
+
+def batch_struct(cfg: ModelConfig, batch: int, seq: int, *,
+                 labels: bool) -> dict:
+    out: dict[str, Any] = {}
+    if cfg.embedding_inputs:
+        out["embeds"] = sds((batch, seq, cfg.d_model), _BF16)
+    else:
+        out["tokens"] = sds((batch, seq), _I32)
+    if labels:
+        out["labels"] = sds((batch, seq), _I32)
+    if cfg.mrope:
+        out["positions3"] = sds((batch, seq, 3), _I32)
+    return out
+
+
+def decode_batch_struct(cfg: ModelConfig, batch: int) -> dict:
+    out: dict[str, Any] = {}
+    if cfg.embedding_inputs:
+        out["embeds"] = sds((batch, 1, cfg.d_model), _BF16)
+    else:
+        out["tokens"] = sds((batch, 1), _I32)
+    out["positions"] = sds((batch, 1), _I32)
+    if cfg.mrope:
+        out["positions3"] = sds((batch, 1, 3), _I32)
+    return out
+
+
+def input_specs(arch: str, shape_name: str,
+                cfg: ModelConfig | None = None) -> dict:
+    """Abstract inputs for one cell (no mesh dependence)."""
+    cfg = cfg or get_config(arch)
+    seq, batch, kind = SHAPES[shape_name]
+    if kind == "train":
+        return {"kind": kind, "cfg": cfg,
+                "batch": batch_struct(cfg, batch, seq, labels=True)}
+    if kind == "prefill":
+        return {"kind": kind, "cfg": cfg,
+                "batch": batch_struct(cfg, batch, seq, labels=False)}
+    # decode: one new token against a seq-length cache
+    caches = jax.eval_shape(partial(init_cache, cfg, batch, seq))
+    return {"kind": kind, "cfg": cfg,
+            "batch": decode_batch_struct(cfg, batch),
+            "caches": caches, "index": sds((), _I32)}
+
+
+@dataclass
+class Cell:
+    arch: str
+    shape: str
+    kind: str
+    cfg: ModelConfig
+    fn: Callable          # jit-able; call .lower(*args)
+    args: tuple           # ShapeDtypeStructs
+    in_shardings: tuple
+
+
+def make_cell(arch: str, shape_name: str, mesh, *,
+              cfg_override: ModelConfig | None = None,
+              microbatches: int = 1) -> Cell:
+    """Assemble the lowerable (fn, abstract args, shardings) for a cell."""
+    spec = input_specs(arch, shape_name, cfg=cfg_override)
+    cfg: ModelConfig = spec["cfg"]
+    dp_axes, model_axis = mesh_axes(mesh)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    dp_size = int(np.prod([sizes[a] for a in dp_axes]))
+    model_size = sizes[model_axis]
+    dist = Dist(mesh=mesh, batch_axes=dp_axes, model_axis=model_axis)
+
+    params_s = jax.eval_shape(partial(init_params, cfg))
+    p_specs = param_specs(params_s, mesh, dp_axes, model_axis,
+                          fsdp=cfg.fsdp)
+    b_specs = batch_specs(cfg, spec["batch"], dp_axes, model_axis, dp_size)
+
+    if spec["kind"] == "train":
+        opt = pick_optimizer(cfg)
+        opt_s = jax.eval_shape(opt.init, params_s)
+        o_specs = param_specs(opt_s, mesh, dp_axes, model_axis,
+                              fsdp=cfg.fsdp)
+        state_s = {"params": params_s, "opt_state": opt_s,
+                   "step": sds((), _I32)}
+        state_specs = {"params": p_specs, "opt_state": o_specs, "step": P()}
+        step = make_train_step(cfg, opt, dist, microbatches=microbatches,
+                               grad_shardings=to_shardings(mesh, p_specs))
+        args = (state_s, spec["batch"])
+        in_sh = (to_shardings(mesh, state_specs), to_shardings(mesh, b_specs))
+        fn = jax.jit(step, in_shardings=in_sh, donate_argnums=(0,),
+                     out_shardings=(in_sh[0], None))
+    elif spec["kind"] == "prefill":
+        args = (params_s, spec["batch"])
+        in_sh = (to_shardings(mesh, p_specs), to_shardings(mesh, b_specs))
+        fn = jax.jit(lambda p, b: prefill(p, b, cfg, dist), in_shardings=in_sh)
+    else:  # decode
+        c_specs = cache_specs(cfg, spec["caches"], dp_axes, model_axis,
+                              dp_size, model_size)
+        args = (params_s, spec["batch"], spec["caches"], spec["index"])
+        in_sh = (to_shardings(mesh, p_specs), to_shardings(mesh, b_specs),
+                 to_shardings(mesh, c_specs), NamedSharding(mesh, P()))
+        fn = jax.jit(
+            lambda p, b, c, i: decode_step(p, b, c, i, cfg, dist),
+            in_shardings=in_sh, donate_argnums=(2,))
+    return Cell(arch=arch, shape=shape_name, kind=spec["kind"], cfg=cfg,
+                fn=fn, args=args, in_shardings=in_sh)

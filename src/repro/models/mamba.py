@@ -1,0 +1,323 @@
+"""Mamba selective-state-space blocks (mamba1: falcon-mamba; mamba2: zamba2).
+
+Training/prefill uses a **chunked associative scan**: the sequence is split
+into chunks; within a chunk the recurrence h_t = a_t * h_{t-1} + b_t runs as a
+parallel ``lax.associative_scan``, and chunk-boundary states are carried by an
+outer ``lax.scan``.  This bounds the materialized (B, Q, C, N) state tensor to
+one chunk — the same blocking the Mamba CUDA kernel uses, re-expressed for
+TPU/XLA (see kernels/mamba_scan for the Pallas version of the inner loop).
+
+Decode keeps (conv_state, ssm_state) and is a single fused update per token.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from .common import ModelConfig
+from .layers import dense_init, rms_norm
+
+
+# --------------------------------------------------------------------------
+# init
+# --------------------------------------------------------------------------
+
+def init_mamba(key, cfg: ModelConfig, dtype) -> dict:
+    d, di, n = cfg.d_model, cfg.d_inner, cfg.ssm_state
+    ks = jax.random.split(key, 8)
+    dt_rank = max(1, -(-d // 16))
+    p = {
+        "in_proj": dense_init(ks[0], (d, 2 * di), dtype=dtype),
+        "conv_w": dense_init(ks[1], (cfg.ssm_conv, di), dtype=dtype),
+        "conv_b": jnp.zeros((di,), dtype),
+        "out_proj": dense_init(ks[2], (di, d), dtype=dtype),
+        "D": jnp.ones((di,), jnp.float32),
+    }
+    if cfg.ssm_version == 1:
+        p.update({
+            "x_proj": dense_init(ks[3], (di, dt_rank + 2 * n), dtype=dtype),
+            "dt_proj": dense_init(ks[4], (dt_rank, di), dtype=dtype),
+            "dt_bias": jnp.full((di,), np.log(np.expm1(0.01)), jnp.float32),
+            "A_log": jnp.log(jnp.broadcast_to(
+                jnp.arange(1, n + 1, dtype=jnp.float32), (di, n))),
+        })
+    else:  # mamba2 (SSD): scalar decay per head; B,C shared across head dim
+        H = cfg.ssm_heads or di // 64
+        p.update({
+            "bc_proj": dense_init(ks[3], (d, 2 * n), dtype=dtype),
+            "dt_w": dense_init(ks[4], (d, H), dtype=dtype),
+            "dt_bias": jnp.full((H,), np.log(np.expm1(0.01)), jnp.float32),
+            "A_log": jnp.zeros((H,), jnp.float32),
+            "norm_scale": jnp.ones((di,), dtype),
+        })
+    return p
+
+
+# --------------------------------------------------------------------------
+# shared pieces
+# --------------------------------------------------------------------------
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv over time.  x: (B, L, C), w: (K, C)."""
+    K = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = lax.conv_general_dilated(
+        pad, w[:, None, :], (1,), "VALID",
+        dimension_numbers=("NLC", "LIO", "NLC"),
+        feature_group_count=x.shape[-1])
+    return out + b
+
+
+def _scan_chunked(a, b, h0, chunk: int):
+    """Run h_t = a_t * h_{t-1} + b_t over axis 1 with chunked associative scan.
+
+    a, b: (B, L, ...) with identical trailing dims; h0: (B, ...).
+    Returns (h at every t: (B, L, ...), final h)."""
+    B, L = a.shape[:2]
+    chunk = min(chunk, L)
+    while L % chunk:  # fall back to the largest divisor <= requested chunk
+        chunk -= 1
+    nc = L // chunk
+    a_c = a.reshape((B, nc, chunk) + a.shape[2:]).swapaxes(0, 1)
+    b_c = b.reshape((B, nc, chunk) + b.shape[2:]).swapaxes(0, 1)
+
+    def combine(x, y):
+        (ax, bx), (ay, by) = x, y
+        return ax * ay, ay * bx + by
+
+    def outer(h, ab):
+        a_q, b_q = ab                                  # (B, Q, ...)
+        pa, pb = lax.associative_scan(combine, (a_q, b_q), axis=1)
+        hs = pa * h[:, None] + pb                       # states at each t
+        return hs[:, -1], hs
+
+    h_final, hs = lax.scan(outer, h0, (a_c, b_c))
+    hs = hs.swapaxes(0, 1).reshape((B, L) + a.shape[2:])
+    return hs, h_final
+
+
+# --------------------------------------------------------------------------
+# mamba1 (falcon-mamba)
+# --------------------------------------------------------------------------
+
+def mamba1_seq(p, cfg: ModelConfig, x, h0=None, chunk: int = 128):
+    """Full-sequence mamba1.  x: (B, L, d) -> (y, (conv_tail, h_final)).
+
+    The decay/drive tensors exp(dt*A) and dt*x*B are computed PER CHUNK
+    inside the chunk scan (``cfg.ssm_impl == "naive"`` materializes them for
+    the full L first — a (B, L, d_inner, n) tensor, 22 TB/device on the
+    falcon-mamba train cell; see EXPERIMENTS.md §Perf).  Same blocking as
+    the Pallas mamba_scan kernel, which computes them in-kernel."""
+    B, L, d = x.shape
+    di, n = cfg.d_inner, cfg.ssm_state
+    dt_rank = p["dt_proj"].shape[0]
+    xz = jnp.einsum("bld,de->ble", x, p["in_proj"])
+    xi, z = jnp.split(xz, 2, axis=-1)
+    conv_tail = xi[:, -(cfg.ssm_conv - 1):, :]
+    xi = jax.nn.silu(_causal_conv(xi, p["conv_w"], p["conv_b"]))
+
+    proj = jnp.einsum("blc,ce->ble", xi, p["x_proj"])
+    dt = jax.nn.softplus(
+        jnp.einsum("blr,rc->blc", proj[..., :dt_rank], p["dt_proj"])
+        + p["dt_bias"]).astype(jnp.float32)                    # (B, L, di)
+    Bv = proj[..., dt_rank:dt_rank + n].astype(jnp.float32)    # (B, L, n)
+    Cv = proj[..., dt_rank + n:].astype(jnp.float32)           # (B, L, n)
+    A = -jnp.exp(p["A_log"])                                   # (di, n)
+    xi32 = xi.astype(jnp.float32)
+    if h0 is None:
+        h0 = jnp.zeros((B, di, n), jnp.float32)
+
+    if getattr(cfg, "ssm_impl", "ssd") == "naive":
+        a = jnp.exp(dt[..., None] * A)                         # (B, L, di, n)
+        bterm = (dt * xi32)[..., None] * Bv[:, :, None, :]
+        hs, h_final = _scan_chunked(a, bterm, h0, chunk)
+        y = jnp.einsum("bldn,bln->bld", hs, Cv)
+    else:
+        Q = min(chunk, L)
+        while L % Q:
+            Q -= 1
+        nc = L // Q
+
+        def rc(t):
+            return t.reshape((B, nc, Q) + t.shape[2:]).swapaxes(0, 1)
+
+        def combine(u, v):
+            (au, bu), (av, bv_) = u, v
+            return au * av, av * bu + bv_
+
+        def chunk_step(h, cx):
+            dt_c, xi_c, B_c, C_c = cx
+            a_c = jnp.exp(dt_c[..., None] * A)                 # (B,Q,di,n)
+            b_c = (dt_c * xi_c)[..., None] * B_c[:, :, None, :]
+            pa, pb = lax.associative_scan(combine, (a_c, b_c), axis=1)
+            hs = pa * h[:, None] + pb
+            y_c = jnp.einsum("bqdn,bqn->bqd", hs, C_c)
+            return hs[:, -1], y_c
+
+        h_final, ys = lax.scan(chunk_step, h0,
+                               (rc(dt), rc(xi32), rc(Bv), rc(Cv)))
+        y = ys.swapaxes(0, 1).reshape(B, L, di)
+    y = y + p["D"] * xi32
+    y = (y.astype(x.dtype) * jax.nn.silu(z))
+    return jnp.einsum("blc,cd->bld", y, p["out_proj"]), (conv_tail, h_final)
+
+
+def mamba1_decode(p, cfg: ModelConfig, x, conv_state, h):
+    """One-token decode.  x: (B, 1, d); conv_state: (B, K-1, di); h: (B, di, n)."""
+    di, n = cfg.d_inner, cfg.ssm_state
+    dt_rank = p["dt_proj"].shape[0]
+    xz = jnp.einsum("bld,de->ble", x, p["in_proj"])
+    xi, z = jnp.split(xz, 2, axis=-1)                          # (B, 1, di)
+    window = jnp.concatenate([conv_state, xi], axis=1)         # (B, K, di)
+    new_conv = window[:, 1:]
+    xi = jax.nn.silu(jnp.einsum("bkc,kc->bc", window, p["conv_w"])
+                     + p["conv_b"])[:, None]
+    proj = jnp.einsum("blc,ce->ble", xi, p["x_proj"])
+    dt = jax.nn.softplus(
+        jnp.einsum("blr,rc->blc", proj[..., :dt_rank], p["dt_proj"])
+        + p["dt_bias"])[:, 0].astype(jnp.float32)              # (B, di)
+    Bv = proj[:, 0, dt_rank:dt_rank + n].astype(jnp.float32)
+    Cv = proj[:, 0, dt_rank + n:].astype(jnp.float32)
+    A = -jnp.exp(p["A_log"])
+    a = jnp.exp(dt[..., None] * A)
+    h = a * h + (dt * xi[:, 0].astype(jnp.float32))[..., None] * Bv[:, None, :]
+    y = jnp.einsum("bdn,bn->bd", h, Cv) + p["D"] * xi[:, 0].astype(jnp.float32)
+    y = (y.astype(x.dtype) * jax.nn.silu(z[:, 0]))[:, None]
+    return jnp.einsum("blc,cd->bld", y, p["out_proj"]), (new_conv, h)
+
+
+# --------------------------------------------------------------------------
+# mamba2 (zamba2) — scalar-decay-per-head SSD
+# --------------------------------------------------------------------------
+
+def mamba2_seq_naive(p, cfg: ModelConfig, x, h0=None, chunk: int = 128):
+    """Reference mamba2: elementwise chunked associative scan.  Materializes
+    the (B, Q, H, dh, n) state tensor per chunk — the memory wall the SSD
+    form removes (kept as the numerical oracle; see mamba2_seq)."""
+    B, L, d = x.shape
+    di, n = cfg.d_inner, cfg.ssm_state
+    H = cfg.ssm_heads or di // 64
+    dh = di // H
+    xz = jnp.einsum("bld,de->ble", x, p["in_proj"])
+    xi, z = jnp.split(xz, 2, axis=-1)
+    conv_tail = xi[:, -(cfg.ssm_conv - 1):, :]
+    xi = jax.nn.silu(_causal_conv(xi, p["conv_w"], p["conv_b"]))
+
+    bc = jnp.einsum("bld,de->ble", x, p["bc_proj"]).astype(jnp.float32)
+    Bv, Cv = bc[..., :n], bc[..., n:]
+    dt = jax.nn.softplus(jnp.einsum("bld,dh->blh", x, p["dt_w"])
+                         + p["dt_bias"]).astype(jnp.float32)   # (B, L, H)
+    A = -jnp.exp(p["A_log"])                                   # (H,)
+    a = jnp.exp(dt * A)                                        # (B, L, H)
+
+    xh = xi.reshape(B, L, H, dh).astype(jnp.float32)
+    bterm = (dt[..., None, None] * xh[..., None]
+             * Bv[:, :, None, None, :])                        # (B,L,H,dh,n)
+    a_full = jnp.broadcast_to(a[..., None, None], bterm.shape)
+    if h0 is None:
+        h0 = jnp.zeros((B, H, dh, n), jnp.float32)
+    hs, h_final = _scan_chunked(a_full, bterm, h0, chunk)
+    y = jnp.einsum("blhdn,bln->blhd", hs, Cv).reshape(B, L, di)
+    y = y + p["D"] * xi.astype(jnp.float32)
+    y = rms_norm(y.astype(x.dtype), p["norm_scale"], cfg.norm_eps)
+    y = y * jax.nn.silu(z)
+    return jnp.einsum("blc,cd->bld", y, p["out_proj"]), (conv_tail, h_final)
+
+
+def mamba2_seq(p, cfg: ModelConfig, x, h0=None, chunk: int = 128):
+    """Mamba2 in the SSD matmul form (Dao & Gu 2024), TPU-adapted.
+
+    Per chunk of length Q the scalar-decay recurrence collapses to
+      y_intra[t] = sum_{s<=t} exp(cum_t - cum_s) * (C_t . B_s) * dt_s * x_s
+    — an attention-like (B, H, Q, Q) matmul — plus a carried-state term and
+    a decay-weighted state update, all MXU matmuls.  The (B, Q, H, dh, n)
+    elementwise-scan state tensor of the naive form never materializes:
+    per-chunk live memory drops from Q*H*dh*n to Q*Q*H + H*dh*n floats
+    (32x for zamba2's Q=128, dh=64, n=64).  Verified == mamba2_seq_naive."""
+    B, L, d = x.shape
+    di, n = cfg.d_inner, cfg.ssm_state
+    H = cfg.ssm_heads or di // 64
+    dh = di // H
+    Q = min(chunk, L)
+    while L % Q:
+        Q -= 1
+    nc = L // Q
+
+    xz = jnp.einsum("bld,de->ble", x, p["in_proj"])
+    xi, z = jnp.split(xz, 2, axis=-1)
+    conv_tail = xi[:, -(cfg.ssm_conv - 1):, :]
+    xi = jax.nn.silu(_causal_conv(xi, p["conv_w"], p["conv_b"]))
+
+    bc = jnp.einsum("bld,de->ble", x, p["bc_proj"]).astype(jnp.float32)
+    Bv, Cv = bc[..., :n], bc[..., n:]
+    dt = jax.nn.softplus(jnp.einsum("bld,dh->blh", x, p["dt_w"])
+                         + p["dt_bias"]).astype(jnp.float32)   # (B, L, H)
+    A = -jnp.exp(p["A_log"])                                   # (H,)
+    loga = dt * A                                              # (B, L, H) <= 0
+    xh = xi.reshape(B, L, H, dh).astype(jnp.float32)
+
+    def reshape_c(t):
+        return t.reshape((B, nc, Q) + t.shape[2:]).swapaxes(0, 1)
+
+    xs = (reshape_c(loga), reshape_c(dt), reshape_c(xh),
+          reshape_c(Bv), reshape_c(Cv))
+    if h0 is None:
+        h0 = jnp.zeros((B, H, dh, n), jnp.float32)
+
+    def chunk_step(h, cx):
+        loga_c, dt_c, x_c, B_c, C_c = cx          # (B,Q,H),(B,Q,H),(B,Q,H,dh),(B,Q,n)x2
+        cum = jnp.cumsum(loga_c, axis=1)           # (B, Q, H) log decay-to-t
+        # intra-chunk: (B,H,Q,Q) decay+gate matrix, causal
+        diff = cum[:, :, None, :] - cum[:, None, :, :]          # (B,Q,Q,H) t,s
+        qi = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0)
+        ki = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1)
+        causal = (ki <= qi)[None, :, :, None]
+        decay = jnp.where(causal, jnp.exp(diff), 0.0)           # (B,Q,Q,H)
+        cb = jnp.einsum("bqn,bsn->bqs", C_c, B_c)               # (B,Q,Q)
+        M = decay * (cb[..., None] * dt_c[:, None, :, :])       # (B,Q,Q,H)
+        y = jnp.einsum("bqsh,bshd->bqhd", M, x_c)               # (B,Q,H,dh)
+        # carried state contribution: y += exp(cum) * (C_t . h0)
+        y = y + jnp.exp(cum)[..., None] * jnp.einsum(
+            "bqn,bhdn->bqhd", C_c, h)
+        # state update: h' = exp(cum_Q) h + sum_s exp(cum_Q - cum_s) u_s,
+        # contracted over s as one einsum — no (B,Q,H,dh,n) intermediate
+        tail = jnp.exp(cum[:, -1:, :] - cum)                    # (B,Q,H)
+        h = jnp.exp(cum[:, -1])[..., None, None] * h + jnp.einsum(
+            "bqh,bqn,bqhd->bhdn", dt_c * tail, B_c, x_c)
+        return h, y
+
+    h_final, ys = lax.scan(chunk_step, h0, xs)
+    y = ys.swapaxes(0, 1).reshape(B, L, di)
+    y = y + p["D"] * xi.astype(jnp.float32)
+    y = rms_norm(y.astype(x.dtype), p["norm_scale"], cfg.norm_eps)
+    y = y * jax.nn.silu(z)
+    return jnp.einsum("blc,cd->bld", y, p["out_proj"]), (conv_tail, h_final)
+
+
+def mamba2_decode(p, cfg: ModelConfig, x, conv_state, h):
+    B = x.shape[0]
+    di, n = cfg.d_inner, cfg.ssm_state
+    H = cfg.ssm_heads or di // 64
+    dh = di // H
+    xz = jnp.einsum("bld,de->ble", x, p["in_proj"])
+    xi, z = jnp.split(xz, 2, axis=-1)
+    window = jnp.concatenate([conv_state, xi], axis=1)
+    new_conv = window[:, 1:]
+    xi = jax.nn.silu(jnp.einsum("bkc,kc->bc", window, p["conv_w"])
+                     + p["conv_b"])                            # (B, di)
+    bc = jnp.einsum("bd,de->be", x[:, 0], p["bc_proj"]).astype(jnp.float32)
+    Bv, Cv = bc[..., :n], bc[..., n:]
+    dt = jax.nn.softplus(jnp.einsum("bd,dh->bh", x[:, 0], p["dt_w"])
+                         + p["dt_bias"]).astype(jnp.float32)   # (B, H)
+    a = jnp.exp(dt * -jnp.exp(p["A_log"]))                     # (B, H)
+    xh = xi.reshape(B, H, dh).astype(jnp.float32)
+    h = (a[..., None, None] * h
+         + dt[..., None, None] * xh[..., None] * Bv[:, None, None, :])
+    y = jnp.einsum("bhdn,bn->bhd", h, Cv).reshape(B, di)
+    y = y + p["D"] * xi.astype(jnp.float32)
+    y = rms_norm(y.astype(x.dtype), p["norm_scale"], cfg.norm_eps)
+    y = (y * jax.nn.silu(z[:, 0]))[:, None]
+    return jnp.einsum("blc,cd->bld", y, p["out_proj"]), (new_conv, h)

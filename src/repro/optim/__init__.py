@@ -1,0 +1,2 @@
+from .optimizers import adafactor, adamw, sgd_momentum  # noqa: F401
+from .schedules import cosine_schedule, wsd_schedule  # noqa: F401

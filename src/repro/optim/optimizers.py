@@ -1,0 +1,125 @@
+"""Functional optimizers (no optax in the container): SGD-momentum, AdamW,
+and Adafactor with factored second moments (the memory-viable choice for the
+671B config — see DESIGN.md memory math).
+
+Interface:  opt = adamw(lr=...);  state = opt.init(params);
+            params, state = opt.update(grads, state, params, step)
+``lr`` may be a float or a schedule fn(step) -> float.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any, Any], tuple]
+    state_bytes_per_param: float  # for memory-planning math
+
+
+def _lr_at(lr, step):
+    return lr(step) if callable(lr) else lr
+
+
+def sgd_momentum(lr=1e-2, momentum=0.9, weight_decay=0.0) -> Optimizer:
+    def init(params):
+        return {"mom": jax.tree.map(jnp.zeros_like, params)}
+
+    def update(grads, state, params, step):
+        lr_t = _lr_at(lr, step)
+        mom = jax.tree.map(lambda m, g: momentum * m + g, state["mom"], grads)
+        params = jax.tree.map(
+            lambda p, m: p - lr_t * (m + weight_decay * p), params, mom)
+        return params, {"mom": mom}
+
+    return Optimizer(init, update, 4.0)
+
+
+def adamw(lr=3e-4, b1=0.9, b2=0.95, eps=1e-8, weight_decay=0.1) -> Optimizer:
+    def init(params):
+        f32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {"m": jax.tree.map(f32, params),
+                "v": jax.tree.map(f32, params),
+                "count": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params, step):
+        lr_t = _lr_at(lr, step)
+        count = state["count"] + 1
+        c1 = 1 - b1 ** count.astype(jnp.float32)
+        c2 = 1 - b2 ** count.astype(jnp.float32)
+        m = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
+                         state["m"], grads)
+        v = jax.tree.map(lambda v, g: b2 * v + (1 - b2) *
+                         jnp.square(g.astype(jnp.float32)), state["v"], grads)
+
+        def step_fn(p, m_, v_):
+            upd = (m_ / c1) / (jnp.sqrt(v_ / c2) + eps)
+            return (p.astype(jnp.float32)
+                    - lr_t * (upd + weight_decay * p.astype(jnp.float32))
+                    ).astype(p.dtype)
+
+        params = jax.tree.map(step_fn, params, m, v)
+        return params, {"m": m, "v": v, "count": count}
+
+    return Optimizer(init, update, 8.0)
+
+
+def adafactor(lr=1e-2, decay=0.8, eps=1e-30, clip_threshold=1.0,
+              weight_decay=0.0) -> Optimizer:
+    """Adafactor (Shazeer & Stern): rank-2+ tensors store row/col second-
+    moment factors instead of the full moment — O(n+m) not O(nm) state."""
+
+    def init(params):
+        def leaf(p):
+            if p.ndim >= 2:
+                return {"r": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "c": jnp.zeros(p.shape[:-2] + p.shape[-1:],
+                                       jnp.float32)}
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+        return {"f": jax.tree.map(leaf, params, is_leaf=lambda x: hasattr(x, "ndim")),
+                "count": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params, step):
+        lr_t = _lr_at(lr, step)
+        count = state["count"] + 1
+        beta = 1.0 - count.astype(jnp.float32) ** (-decay)
+
+        def leaf(g, f, p):
+            g32 = g.astype(jnp.float32)
+            g2 = jnp.square(g32) + eps
+            if g.ndim >= 2:
+                r = beta * f["r"] + (1 - beta) * jnp.mean(g2, axis=-1)
+                c = beta * f["c"] + (1 - beta) * jnp.mean(g2, axis=-2)
+                rmean = jnp.mean(r, axis=-1, keepdims=True)
+                vhat = (r[..., None] / (rmean[..., None] + eps)) * c[..., None, :]
+                upd = g32 / (jnp.sqrt(vhat) + eps)
+                nf = {"r": r, "c": c}
+            else:
+                v = beta * f["v"] + (1 - beta) * g2
+                upd = g32 / (jnp.sqrt(v) + eps)
+                nf = {"v": v}
+            # update clipping (RMS)
+            rms = jnp.sqrt(jnp.mean(jnp.square(upd)) + eps)
+            upd = upd / jnp.maximum(1.0, rms / clip_threshold)
+            newp = (p.astype(jnp.float32) - lr_t *
+                    (upd + weight_decay * p.astype(jnp.float32))).astype(p.dtype)
+            return newp, nf
+
+        flat_g, tdef = jax.tree.flatten(grads)
+        flat_f = tdef.flatten_up_to(state["f"])
+        flat_p = tdef.flatten_up_to(params)
+        new = [leaf(g, f, p) for g, f, p in zip(flat_g, flat_f, flat_p)]
+        params = tdef.unflatten([n[0] for n in new])
+        fstate = tdef.unflatten([n[1] for n in new])
+        return params, {"f": fstate, "count": count}
+
+    return Optimizer(init, update, 0.1)
+
+
+OPTIMIZERS = {"sgd": sgd_momentum, "adamw": adamw, "adafactor": adafactor}

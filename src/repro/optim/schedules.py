@@ -1,0 +1,35 @@
+"""Learning-rate schedules, including the WSD (warmup-stable-decay)
+schedule MiniCPM's recipe calls for."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def wsd_schedule(peak: float, warmup: int, stable: int, decay: int,
+                 floor: float = 0.0):
+    """Warmup-Stable-Decay (MiniCPM, arXiv:2404.06395)."""
+
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak * step / jnp.maximum(warmup, 1)
+        dec_frac = (step - warmup - stable) / jnp.maximum(decay, 1)
+        dec = peak * (1.0 - dec_frac) + floor * dec_frac
+        return jnp.where(step < warmup, warm,
+                         jnp.where(step < warmup + stable, peak,
+                                   jnp.maximum(dec, floor)))
+
+    return lr
+
+
+def cosine_schedule(peak: float, warmup: int, total: int,
+                    floor_ratio: float = 0.1):
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak * step / jnp.maximum(warmup, 1)
+        frac = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0, 1)
+        cos = floor_ratio * peak + (1 - floor_ratio) * peak * 0.5 * (
+            1 + jnp.cos(jnp.pi * frac))
+        return jnp.where(step < warmup, warm, cos)
+
+    return lr

@@ -1,0 +1,2 @@
+from .train_step import TrainState, make_train_step  # noqa: F401
+from .checkpoint import load_latest, restore_like, save_checkpoint  # noqa: F401

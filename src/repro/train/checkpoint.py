@@ -1,0 +1,103 @@
+"""Mesh-agnostic checkpointing with atomic writes, async save, retention,
+and elastic resharding on restore.
+
+Checkpoints are plain ``.npz`` files of path-flattened arrays (one per host
+in a real deployment; this container is single-host).  Restoring onto a
+*different* mesh is supported because the file stores unsharded logical
+arrays: ``restore_like`` device_puts each leaf with the sharding of the
+template state, whatever mesh that template lives on.
+"""
+
+from __future__ import annotations
+
+import os
+import re
+import tempfile
+import threading
+from typing import Any
+
+import jax
+import numpy as np
+
+_CKPT_RE = re.compile(r"ckpt_(\d+)\.npz$")
+
+
+def _flatten(state) -> dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(state)[0]:
+        key = jax.tree_util.keystr(path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def save_checkpoint(ckpt_dir: str, state: Any, step: int, *, keep: int = 3,
+                    async_save: bool = False) -> str | threading.Thread:
+    """Write ``ckpt_<step>.npz`` atomically (tmp + rename); prune old ones.
+    With ``async_save`` the host-to-disk copy happens on a worker thread
+    after the device-to-host fetch (the fetch must be synchronous so the
+    arrays are step-consistent)."""
+    os.makedirs(ckpt_dir, exist_ok=True)
+    flat = _flatten(state)  # device->host fetch happens here, synchronously
+
+    def write():
+        fd, tmp = tempfile.mkstemp(dir=ckpt_dir, suffix=".tmp")
+        with os.fdopen(fd, "wb") as f:
+            np.savez(f, **flat)
+        final = os.path.join(ckpt_dir, f"ckpt_{step}.npz")
+        os.replace(tmp, final)   # atomic: readers never see partial files
+        _prune(ckpt_dir, keep)
+        return final
+
+    if async_save:
+        t = threading.Thread(target=write, daemon=True)
+        t.start()
+        return t
+    return write()
+
+
+def _prune(ckpt_dir: str, keep: int) -> None:
+    steps = sorted(int(m.group(1)) for f in os.listdir(ckpt_dir)
+                   if (m := _CKPT_RE.search(f)))
+    for s in steps[:-keep]:
+        try:
+            os.remove(os.path.join(ckpt_dir, f"ckpt_{s}.npz"))
+        except FileNotFoundError:
+            pass
+
+
+def latest_step(ckpt_dir: str) -> int | None:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [int(m.group(1)) for f in os.listdir(ckpt_dir)
+             if (m := _CKPT_RE.search(f))]
+    return max(steps) if steps else None
+
+
+def load_latest(ckpt_dir: str) -> tuple[int, dict[str, np.ndarray]] | None:
+    step = latest_step(ckpt_dir)
+    if step is None:
+        return None
+    data = np.load(os.path.join(ckpt_dir, f"ckpt_{step}.npz"))
+    return step, {k: data[k] for k in data.files}
+
+
+def restore_like(template: Any, flat: dict[str, np.ndarray]) -> Any:
+    """Rebuild a pytree shaped like ``template`` from flattened arrays,
+    placing each leaf with the template leaf's sharding (elastic restore:
+    the template may live on a different mesh than the checkpoint's)."""
+    leaves_p, tdef = jax.tree_util.tree_flatten_with_path(template)
+    out = []
+    for path, leaf in leaves_p:
+        key = jax.tree_util.keystr(path)
+        if key not in flat:
+            raise KeyError(f"checkpoint missing leaf {key}")
+        arr = flat[key]
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(f"{key}: checkpoint shape {arr.shape} != "
+                             f"template {leaf.shape}")
+        sharding = getattr(leaf, "sharding", None)
+        if sharding is not None:
+            out.append(jax.device_put(arr.astype(leaf.dtype), sharding))
+        else:
+            out.append(jax.numpy.asarray(arr, leaf.dtype))
+    return jax.tree_util.tree_unflatten(tdef, out)

@@ -1,0 +1,4 @@
+from .datasets import synthetic_cifar10, synthetic_mnist  # noqa: F401
+from .twofc import build_twofc_training_workload  # noqa: F401
+from .mobilenet import build_mobilenet_prediction_workload  # noqa: F401
+from .tinyformer import build_tinyformer_prediction_workload  # noqa: F401

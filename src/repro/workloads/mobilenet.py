@@ -1,0 +1,195 @@
+"""MobileNet — the paper's prediction workload (Section 5, Table 1).
+
+MobileNetV1 adapted to 32x32 CIFAR inputs (strides reduced, width multiplier
+``alpha``), matching the paper's layer census: depthwise + standard (point-
+wise) convolutions, batch-norm after every conv, one average pool, and two
+fully-connected layers.
+
+The network is (pre)trained here in plain JAX (the paper used pretrained TF
+weights; the container is offline), then **baked into an IR program with
+weights as constants** — the representation GEVO-ML mutates.  BN is emitted
+in unfused inference form so mutations can splice individual gamma/beta
+tensors (the paper's key MobileNet mutation swapped one BN layer's gamma).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from ..core.builder import Builder
+from ..core.fitness import PredictionWorkload
+from ..core.ir import Program
+from .datasets import synthetic_cifar10
+
+# (stride, out_channels) for each depthwise-separable block; strides reduced
+# for 32x32 inputs (ImageNet MobileNet assumes 224x224).
+_BLOCKS = [(1, 64), (2, 128), (1, 128), (2, 256), (1, 256),
+           (2, 512), (1, 512), (1, 512), (2, 1024), (1, 1024)]
+
+
+def _ch(c: int, alpha: float) -> int:
+    return max(8, int(c * alpha))
+
+
+def init_mobilenet(alpha: float = 0.25, classes: int = 10, hidden: int = 128,
+                   seed: int = 0) -> dict:
+    rng = np.random.default_rng(seed)
+
+    def conv_w(kh, kw, ci, co):
+        s = np.sqrt(2.0 / (kh * kw * ci))
+        return (rng.standard_normal((kh, kw, ci, co)) * s).astype(np.float32)
+
+    def bn(c):
+        return {"gamma": np.ones(c, np.float32), "beta": np.zeros(c, np.float32),
+                "mean": np.zeros(c, np.float32), "var": np.ones(c, np.float32)}
+
+    c0 = _ch(32, alpha)
+    params = {"stem_w": conv_w(3, 3, 3, c0), "stem_bn": bn(c0)}
+    ci = c0
+    for i, (s, co) in enumerate(_BLOCKS):
+        co = _ch(co, alpha)
+        params[f"dw{i}_w"] = conv_w(3, 3, 1, ci)
+        params[f"dw{i}_bn"] = bn(ci)
+        params[f"pw{i}_w"] = conv_w(1, 1, ci, co)
+        params[f"pw{i}_bn"] = bn(co)
+        ci = co
+    sf = np.sqrt(2.0 / ci)
+    params["fc1_w"] = (rng.standard_normal((ci, hidden)) * sf).astype(np.float32)
+    params["fc1_b"] = np.zeros(hidden, np.float32)
+    params["fc2_w"] = (rng.standard_normal((hidden, classes))
+                       * np.sqrt(2.0 / hidden)).astype(np.float32)
+    params["fc2_b"] = np.zeros(classes, np.float32)
+    return params
+
+
+def _bn_apply(x, bn, train: bool, momentum=0.9):
+    if train:
+        mean = jnp.mean(x, axis=(0, 1, 2))
+        var = jnp.var(x, axis=(0, 1, 2))
+        new = {"gamma": bn["gamma"], "beta": bn["beta"],
+               "mean": momentum * bn["mean"] + (1 - momentum) * mean,
+               "var": momentum * bn["var"] + (1 - momentum) * var}
+    else:
+        mean, var, new = bn["mean"], bn["var"], bn
+    y = (x - mean) * lax.rsqrt(var + 1e-3) * bn["gamma"] + bn["beta"]
+    return y, new
+
+
+def forward(params: dict, x, train: bool = False):
+    """Returns (logits, updated_params_with_bn_stats)."""
+    p = dict(params)
+
+    def conv(x, w, stride, groups=1):
+        return lax.conv_general_dilated(
+            x, w, (stride, stride), "SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"),
+            feature_group_count=groups)
+
+    h = conv(x, p["stem_w"], 1)
+    h, p["stem_bn"] = _bn_apply(h, p["stem_bn"], train)
+    h = jnp.maximum(h, 0.0)
+    for i, (s, _) in enumerate(_BLOCKS):
+        c = h.shape[-1]
+        h = conv(h, p[f"dw{i}_w"], s, groups=c)
+        h, p[f"dw{i}_bn"] = _bn_apply(h, p[f"dw{i}_bn"], train)
+        h = jnp.maximum(h, 0.0)
+        h = conv(h, p[f"pw{i}_w"], 1)
+        h, p[f"pw{i}_bn"] = _bn_apply(h, p[f"pw{i}_bn"], train)
+        h = jnp.maximum(h, 0.0)
+    h = jnp.mean(h, axis=(1, 2))
+    h = jnp.maximum(h @ p["fc1_w"] + p["fc1_b"], 0.0)
+    return h @ p["fc2_w"] + p["fc2_b"], p
+
+
+def pretrain(params: dict, x: np.ndarray, y: np.ndarray, *, epochs: int = 3,
+             batch: int = 64, lr: float = 0.05, seed: int = 0,
+             verbose: bool = False) -> dict:
+    """Plain-JAX SGD-momentum pretraining (stands in for the paper's
+    pretrained TF weights)."""
+    trainable = [k for k in params if not k.endswith("_bn")]
+    momenta = {k: jnp.zeros_like(params[k]) for k in trainable}
+
+    def loss_fn(tp, bn_p, xb, yb):
+        merged = {**bn_p, **tp}
+        logits, new_p = forward(merged, xb, train=True)
+        logp = jax.nn.log_softmax(logits)
+        loss = -jnp.mean(jnp.sum(jax.nn.one_hot(yb, logits.shape[-1]) * logp, -1))
+        return loss, {k: new_p[k] for k in bn_p}
+
+    @jax.jit
+    def step(tp, bn_p, mom, xb, yb):
+        (loss, new_bn), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            tp, bn_p, xb, yb)
+        new_mom = {k: 0.9 * mom[k] + grads[k] for k in tp}
+        new_tp = {k: tp[k] - lr * new_mom[k] for k in tp}
+        return new_tp, new_bn, new_mom, loss
+
+    tp = {k: jnp.asarray(params[k]) for k in trainable}
+    bn_p = {k: {kk: jnp.asarray(vv) for kk, vv in params[k].items()}
+            for k in params if k.endswith("_bn")}
+    rng = np.random.default_rng(seed)
+    n = (len(x) // batch) * batch
+    for ep in range(epochs):
+        order = rng.permutation(len(x))[:n]
+        for i in range(0, n, batch):
+            idx = order[i:i + batch]
+            tp, bn_p, momenta, loss = step(tp, bn_p, momenta, x[idx], y[idx])
+        if verbose:
+            print(f"  pretrain epoch {ep}: loss={float(loss):.3f}")
+    out = {k: np.asarray(v) for k, v in tp.items()}
+    out.update({k: {kk: np.asarray(vv) for kk, vv in v.items()}
+                for k, v in bn_p.items()})
+    return out
+
+
+def mobilenet_to_ir(params: dict, batch: int, img: int = 32) -> Program:
+    """Bake trained weights into an inference IR program (Figure 1 style)."""
+    b = Builder("mobilenet_fwd")
+    x = b.input("images", (batch, img, img, 3))
+
+    def bn_ir(h, bn):
+        return b.batch_norm_inference(
+            h, b.const(bn["gamma"]), b.const(bn["beta"]),
+            b.const(bn["mean"]), b.const(bn["var"]))
+
+    h = b.conv2d(x, b.const(params["stem_w"]), strides=(1, 1))
+    h = b.relu(bn_ir(h, params["stem_bn"]))
+    for i, (s, _) in enumerate(_BLOCKS):
+        c = b.shape(h)[-1]
+        h = b.conv2d(h, b.const(params[f"dw{i}_w"]), strides=(s, s), groups=c)
+        h = b.relu(bn_ir(h, params[f"dw{i}_bn"]))
+        h = b.conv2d(h, b.const(params[f"pw{i}_w"]), strides=(1, 1))
+        h = b.relu(bn_ir(h, params[f"pw{i}_bn"]))
+    hh, hw = b.shape(h)[1], b.shape(h)[2]
+    h = b.avg_pool(h, (hh, hw))                       # global average pool
+    h = b.reshape(h, (batch, b.shape(h)[-1]))          # flatten
+    h = b.relu(b.dense(h, b.const(params["fc1_w"]), b.const(params["fc1_b"])))
+    logits = b.dense(h, b.const(params["fc2_w"]), b.const(params["fc2_b"]))
+    b.output(b.softmax(logits))
+    return b.done()
+
+
+def build_mobilenet_prediction_workload(*, alpha: float = 0.25,
+                                        batch: int = 64,
+                                        n_eval: int = 2048,
+                                        n_pretrain: int = 6000,
+                                        pretrain_epochs: int = 3,
+                                        time_mode: str = "static",
+                                        seed: int = 0,
+                                        verbose: bool = False
+                                        ) -> PredictionWorkload:
+    xtr, ytr, _, _ = synthetic_cifar10()
+    params = init_mobilenet(alpha=alpha, seed=seed)
+    params = pretrain(params, xtr[:n_pretrain], ytr[:n_pretrain],
+                      epochs=pretrain_epochs, seed=seed, verbose=verbose)
+    program = mobilenet_to_ir(params, batch)
+    return PredictionWorkload(
+        name="MobileNet-prediction",
+        program=program,
+        images=xtr[:n_eval], labels=ytr[:n_eval],
+        batch=batch, time_mode=time_mode)

@@ -1,0 +1,68 @@
+"""GEVO-Shard genome machinery (no compiles — the search's variation
+operators and genome<->config mapping only)."""
+
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.autotune import (GENOME_SPACE, apply_genome, default_genome,
+                                 genome_keys)
+
+
+def test_default_genome_matches_config():
+    cfg = get_config("qwen2-vl-72b")
+    g = default_genome(cfg, "train")
+    assert g["remat"] == cfg.remat
+    assert g["attn_impl"] == cfg.attn_impl
+    assert set(g) == set(genome_keys("train"))
+
+
+def test_inference_genome_drops_train_knobs():
+    keys = genome_keys("prefill")
+    assert "microbatches" not in keys and "loss_chunk" not in keys
+    assert "attn_impl" in keys
+
+
+def test_apply_genome_roundtrip():
+    cfg = get_config("qwen3-0.6b")
+    g = default_genome(cfg, "train")
+    g["attn_impl"] = "blockwise"
+    g["microbatches"] = 4
+    cfg2, micro = apply_genome(cfg, g)
+    assert cfg2.attn_impl == "blockwise" and micro == 4
+    assert cfg2.d_model == cfg.d_model  # arch untouched
+
+
+def test_genome_space_values_all_applicable():
+    cfg = get_config("minicpm-2b")
+    rng = np.random.default_rng(0)
+    for _ in range(30):
+        g = {k: v[rng.integers(len(v))] for k, v in GENOME_SPACE.items()}
+        cfg2, micro = apply_genome(cfg, g)
+        assert cfg2.attn_block in GENOME_SPACE["attn_block"]
+        assert micro in GENOME_SPACE["microbatches"]
+
+
+def test_mutation_changes_exactly_one_gene():
+    from repro.core.autotune import GevoShard
+    s = GevoShard.__new__(GevoShard)  # no compile machinery needed
+    s.keys = genome_keys("train")
+    s.rng = np.random.default_rng(1)
+    g = default_genome(get_config("qwen3-0.6b"), "train")
+    for _ in range(20):
+        m = GevoShard._mutate(s, g)
+        diff = [k for k in s.keys if m[k] != g[k]]
+        assert len(diff) == 1
+
+
+def test_crossover_genes_come_from_parents():
+    from repro.core.autotune import GevoShard
+    s = GevoShard.__new__(GevoShard)
+    s.keys = genome_keys("train")
+    s.rng = np.random.default_rng(2)
+    a = default_genome(get_config("qwen3-0.6b"), "train")
+    b = dict(a, remat="full", attn_impl="blockwise", microbatches=2)
+    for _ in range(10):
+        c = GevoShard._crossover(s, a, b)
+        for k in s.keys:
+            assert c[k] in (a[k], b[k])

@@ -1,0 +1,60 @@
+"""Fault-tolerance control plane: heartbeats, stragglers, shard reassignment."""
+
+import pytest
+
+from repro.train.fault import (ElasticPlan, HeartbeatMonitor, control_tick,
+                               reassign_shards)
+
+
+def test_failure_detection():
+    m = HeartbeatMonitor(n_hosts=4, timeout=10)
+    for h in range(4):
+        m.heartbeat(h, now=0.0)
+    m.heartbeat(0, 95.0)
+    m.heartbeat(1, 96.0)
+    m.heartbeat(2, 97.0)
+    assert m.failed(now=100.0) == [3]
+
+
+def test_straggler_detection():
+    m = HeartbeatMonitor(n_hosts=4, timeout=100, straggler_factor=2.0)
+    lat = {0: 1.0, 1: 1.1, 2: 0.9, 3: 5.0}
+    for h, l in lat.items():
+        m.heartbeat(h, now=0.0, step_latency=l)
+    assert m.stragglers(now=1.0) == [3]
+
+
+def test_reassignment_covers_batch_disjointly():
+    out = reassign_shards(256, [0, 1, 2, 5])
+    rows = sorted(r for rng in out.values() for r in rng)
+    assert rows == list(range(256))
+
+
+def test_reassignment_deterministic():
+    a = reassign_shards(128, [1, 3, 4], weights={3: 0.5})
+    b = reassign_shards(128, [1, 3, 4], weights={3: 0.5})
+    assert {h: (r.start, r.stop) for h, r in a.items()} == \
+           {h: (r.start, r.stop) for h, r in b.items()}
+
+
+def test_straggler_gets_smaller_share():
+    out = reassign_shards(300, [0, 1, 2], weights={1: 0.5})
+    assert len(out[1]) < len(out[0])
+    assert sum(len(r) for r in out.values()) == 300
+
+
+def test_no_alive_hosts_raises():
+    with pytest.raises(ValueError):
+        reassign_shards(10, [])
+
+
+def test_control_tick_full_flow():
+    m = HeartbeatMonitor(n_hosts=4, timeout=10, straggler_factor=2.0)
+    for h in range(3):
+        m.heartbeat(h, now=100.0, step_latency=1.0 if h else 4.0)
+    plan = control_tick(m, now=105.0, global_batch=64, checkpoint_step=42)
+    assert isinstance(plan, ElasticPlan)
+    assert plan.alive == [0, 1, 2]            # host 3 never heartbeated
+    assert plan.restarted_from_step == 42     # failure -> rollback
+    assert len(plan.assignments[0]) < len(plan.assignments[1])  # straggler 0
+    assert sum(len(r) for r in plan.assignments.values()) == 64

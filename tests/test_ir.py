@@ -1,0 +1,99 @@
+"""IR: type inference, verification, interpreter correctness, cost model."""
+
+import numpy as np
+import pytest
+
+from repro.core.builder import Builder
+from repro.core.interp import evaluate, jit_program
+from repro.core.ir import (IRTypeError, IRVerifyError, Program, TensorType,
+                           infer_type, program_cost)
+
+
+def _mlp():
+    b = Builder("mlp")
+    x = b.input("x", (4, 8))
+    w = b.const(np.arange(8 * 3, dtype=np.float32).reshape(8, 3) * 0.01)
+    y = b.relu(b.dot(x, w))
+    b.output(b.softmax(y))
+    return b.done()
+
+
+def test_interpreter_matches_numpy():
+    p = _mlp()
+    x = np.random.RandomState(0).randn(4, 8).astype(np.float32)
+    (out,) = evaluate(p, {"x": x})
+    w = np.arange(8 * 3, dtype=np.float32).reshape(8, 3) * 0.01
+    h = np.maximum(x @ w, 0)
+    e = np.exp(h - h.max(-1, keepdims=True))
+    ref = e / e.sum(-1, keepdims=True)
+    np.testing.assert_allclose(np.asarray(out), ref, rtol=1e-5)
+
+
+def test_jit_program_matches_eager():
+    p = _mlp()
+    x = np.random.RandomState(1).randn(4, 8).astype(np.float32)
+    eager = evaluate(p, {"x": x})[0]
+    jitted = jit_program(p)({"x": x})[0]
+    np.testing.assert_allclose(np.asarray(eager), np.asarray(jitted),
+                               rtol=1e-6)
+
+
+def test_verify_catches_use_before_def():
+    p = _mlp()
+    # move the last op to the front -> operand defined later
+    p.ops.insert(0, p.ops.pop())
+    with pytest.raises(IRVerifyError):
+        p.verify()
+
+
+def test_verify_catches_type_mismatch():
+    p = _mlp()
+    p.ops[-1].type = TensorType((1, 1))
+    with pytest.raises(IRVerifyError):
+        p.verify()
+
+
+@pytest.mark.parametrize("opcode,shapes,attrs,expected", [
+    ("add", [(2, 3), (2, 3)], {}, (2, 3)),
+    ("dot", [(2, 3), (3, 5)], {}, (2, 5)),
+    ("dot", [(7, 2, 3), (7, 3, 5)],
+     {"dims": (((2,), (1,)), ((0,), (0,)))}, (7, 2, 5)),
+    ("reshape", [(2, 6)], {"new_shape": (3, 4)}, (3, 4)),
+    ("reduce_sum", [(2, 3, 4)], {"dims": (1,)}, (2, 4)),
+    ("pad", [(2, 3)], {"low": (1, 0), "high": (0, 2), "value": 1.0}, (3, 5)),
+    ("slice", [(5, 6)], {"start": (1, 2), "limit": (4, 6)}, (3, 4)),
+    ("transpose", [(2, 3, 4)], {"permutation": (2, 0, 1)}, (4, 2, 3)),
+    ("conv", [(1, 8, 8, 3), (3, 3, 3, 16)], {"strides": (2, 2),
+                                             "padding": "SAME"}, (1, 4, 4, 16)),
+    ("avg_pool", [(1, 8, 8, 4)], {"window": (2, 2)}, (1, 4, 4, 4)),
+])
+def test_type_inference(opcode, shapes, attrs, expected):
+    ts = [TensorType(s) for s in shapes]
+    assert infer_type(opcode, ts, attrs).shape == expected
+
+
+@pytest.mark.parametrize("opcode,shapes,attrs", [
+    ("add", [(2, 3), (3, 2)], {}),
+    ("dot", [(2, 3), (4, 5)], {}),
+    ("reshape", [(2, 3)], {"new_shape": (4, 2)}),
+    ("slice", [(5,)], {"start": (3,), "limit": (2,)}),
+])
+def test_type_inference_rejects(opcode, shapes, attrs):
+    with pytest.raises(IRTypeError):
+        infer_type(opcode, [TensorType(s) for s in shapes], attrs)
+
+
+def test_cost_model_counts_matmul_flops():
+    b = Builder()
+    x = b.input("x", (16, 32))
+    w = b.const(np.zeros((32, 8), np.float32))
+    b.output(b.dot(x, w))
+    p = b.done()
+    flops, _ = program_cost(p)
+    assert flops == 2 * 16 * 32 * 8
+
+
+def test_printer_roundtrips_op_count():
+    p = _mlp()
+    text = str(p)
+    assert text.count("hlo.") == len(p.ops)

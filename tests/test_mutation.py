@@ -1,0 +1,137 @@
+"""Mutation operators: validity after repair, determinism, resize properties,
+crossover validity rate (paper reports ~80%)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.builder import Builder
+from repro.core.crossover import messy_crossover
+from repro.core.interp import evaluate
+from repro.core.ir import TensorType
+from repro.core.mutation import (Edit, EditError, apply_patch, random_edit,
+                                 resize_value)
+
+
+def _program():
+    b = Builder("mlp")
+    x = b.input("x", (4, 8))
+    w1 = b.const(np.random.RandomState(0).randn(8, 16).astype(np.float32))
+    h = b.relu(b.dot(x, w1))
+    w2 = b.const(np.random.RandomState(1).randn(16, 6).astype(np.float32))
+    b.output(b.softmax(b.dot(h, w2)))
+    return b.done()
+
+
+def test_mutations_always_repair_to_valid_programs():
+    p = _program()
+    rng = np.random.default_rng(0)
+    for _ in range(150):
+        e = random_edit(p, rng)
+        q = apply_patch(p, [e])
+        q.verify()
+        evaluate(q, {"x": np.zeros((4, 8), np.float32)})
+
+
+def test_patch_application_is_deterministic():
+    p = _program()
+    rng = np.random.default_rng(3)
+    edits = [random_edit(p, rng) for _ in range(3)]
+    # edits may conflict; retry until a valid 2-edit patch is found
+    for e1 in edits:
+        for e2 in edits:
+            try:
+                q1 = apply_patch(p, [e1, e2])
+                q2 = apply_patch(p, [e1, e2])
+            except EditError:
+                continue
+            assert str(q1) == str(q2)
+            return
+    pytest.skip("no applicable 2-edit patch found")
+
+
+def test_delete_removes_target_op():
+    p = _program()
+    uid = p.ops[2].uid
+    q = apply_patch(p, [Edit("delete", target_uid=uid, seed=1)])
+    assert q.op_index_by_uid(uid) is None
+    assert len(q.ops) <= len(p.ops) + 4  # repair may insert resize ops
+
+
+def test_copy_inserts_clone():
+    p = _program()
+    e = Edit("copy", target_uid=p.ops[1].uid, dest_uid=p.ops[-1].uid, seed=2)
+    q = apply_patch(p, [e])
+    assert len(q.ops) >= len(p.ops) + 1
+    q.verify()
+
+
+def test_edit_on_missing_uid_raises():
+    p = _program()
+    with pytest.raises(EditError):
+        apply_patch(p, [Edit("delete", target_uid=10_000, seed=0)])
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    src=st.lists(st.integers(1, 6), min_size=1, max_size=3),
+    dst=st.lists(st.integers(1, 6), min_size=1, max_size=3),
+)
+def test_resize_value_reaches_any_target_type(src, dst):
+    """Property: the paper's tensor-resize repair maps any tensor type to any
+    other, and the resized program still executes."""
+    b = Builder()
+    x = b.input("x", tuple(src))
+    b.output(b.relu(x))
+    p = b.done()
+    target = TensorType(tuple(dst))
+    v, _ = resize_value(p, p.ops[0].result, target, insert_at=len(p.ops))
+    assert p.type_of(v) == target
+    p.outputs = [v]
+    p.verify()
+    (out,) = evaluate(p, {"x": np.ones(tuple(src), np.float32)})
+    assert out.shape == tuple(dst)
+
+
+def test_resize_pads_with_value_one():
+    b = Builder()
+    x = b.input("x", (2,))
+    b.output(b.relu(x))
+    p = b.done()
+    v, _ = resize_value(p, p.outputs[0], TensorType((6,)), len(p.ops))
+    p.outputs = [v]
+    (out,) = evaluate(p, {"x": np.array([5.0, 7.0], np.float32)})
+    out = np.asarray(out)
+    assert (out == 1.0).sum() == 4  # grown entries are 1 (paper Sec. 4.1)
+    assert {5.0, 7.0} <= set(out.tolist())
+
+
+def test_crossover_validity_rate_near_paper():
+    """Paper Sec 4.2: ~80% of messy-crossover children are valid."""
+    p = _program()
+    rng = np.random.default_rng(7)
+
+    def grow(n):
+        edits = []
+        while len(edits) < n:
+            try:
+                q = apply_patch(p, edits)
+                e = random_edit(q, rng)
+                apply_patch(p, edits + [e])
+                edits.append(e)
+            except EditError:
+                continue
+        return edits
+
+    ok = total = 0
+    for _ in range(40):
+        a, c = messy_crossover(grow(3), grow(3), rng)
+        for child in (a, c):
+            total += 1
+            try:
+                q = apply_patch(p, child)
+                evaluate(q, {"x": np.zeros((4, 8), np.float32)})
+                ok += 1
+            except Exception:
+                pass
+    assert ok / total > 0.5, f"validity rate {ok/total:.2f} far below paper's ~80%"

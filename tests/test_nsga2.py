@@ -1,0 +1,59 @@
+"""NSGA-II machinery: domination, fronts, crowding, selection invariants."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.nsga2 import (crowding_distance, dominates,
+                              fast_non_dominated_sort, pareto_front,
+                              rank_population, select_elites, tournament)
+
+
+def test_dominates():
+    assert dominates([1, 1], [2, 2])
+    assert dominates([1, 2], [1, 3])
+    assert not dominates([1, 2], [2, 1])
+    assert not dominates([1, 1], [1, 1])
+
+
+def test_fronts_on_known_set():
+    objs = np.array([[1, 5], [2, 4], [3, 3], [2, 6], [4, 4], [5, 5]])
+    fronts = fast_non_dominated_sort(objs)
+    assert sorted(fronts[0]) == [0, 1, 2]
+    assert 5 in fronts[-1]
+
+
+def test_crowding_boundary_points_infinite():
+    objs = np.array([[1.0, 5], [2, 4], [3, 3], [4, 2], [5, 1]])
+    d = crowding_distance(objs, list(range(5)))
+    assert np.isinf(d[0]) and np.isinf(d[-1])
+    assert np.all(d[1:-1] > 0) and np.all(np.isfinite(d[1:-1]))
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(st.tuples(st.floats(0, 10), st.floats(0, 10)),
+                min_size=2, max_size=30))
+def test_pareto_front_members_are_nondominated(pts):
+    objs = np.array(pts)
+    pf = pareto_front(objs)
+    for i in pf:
+        for j in range(len(objs)):
+            assert not dominates(objs[j], objs[i])
+
+
+def test_elites_are_front_prefix():
+    objs = np.array([[1, 5], [2, 4], [3, 3], [2, 6], [4, 4], [5, 5],
+                     [0.5, 7], [6, 0.5]])
+    elites = select_elites(objs, 4)
+    rank, _ = rank_population(objs)
+    worst_elite = max(rank[i] for i in elites)
+    best_out = min((rank[i] for i in range(len(objs)) if i not in elites),
+                   default=99)
+    assert worst_elite <= best_out
+
+
+def test_tournament_prefers_better_rank():
+    rng = np.random.default_rng(0)
+    rank = np.array([0, 1, 1, 2])
+    crowd = np.ones(4)
+    wins = [tournament(rng, rank, crowd) for _ in range(200)]
+    assert np.bincount(wins, minlength=4)[0] > 60

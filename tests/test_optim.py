@@ -1,0 +1,81 @@
+"""Optimizers, schedules, gradient compression."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.optim.grad_compress import dequantize_int8, quantize_int8
+from repro.optim.optimizers import adafactor, adamw, sgd_momentum
+from repro.optim.schedules import cosine_schedule, wsd_schedule
+
+
+@pytest.mark.parametrize("opt_fn", [
+    lambda: sgd_momentum(lr=0.1),
+    lambda: adamw(lr=0.05, weight_decay=0.0),
+    lambda: adafactor(lr=0.3),
+])
+def test_optimizer_minimizes_quadratic(opt_fn):
+    opt = opt_fn()
+    params = {"w": jnp.array([3.0, -2.0, 1.5]), "b": jnp.array([[1.0, -1.0]])}
+
+    def loss_fn(p):
+        return jnp.sum(p["w"] ** 2) + jnp.sum(p["b"] ** 2)
+
+    state = opt.init(params)
+    l0 = float(loss_fn(params))
+    for step in range(60):
+        g = jax.grad(loss_fn)(params)
+        params, state = opt.update(g, state, params, step)
+    assert float(loss_fn(params)) < l0 * 0.05
+
+
+def test_adafactor_state_is_factored():
+    opt = adafactor()
+    params = {"w": jnp.zeros((64, 32)), "b": jnp.zeros((32,))}
+    state = opt.init(params)
+    assert state["f"]["w"]["r"].shape == (64,)
+    assert state["f"]["w"]["c"].shape == (32,)
+    assert state["f"]["b"]["v"].shape == (32,)
+
+
+def test_wsd_schedule_phases():
+    lr = wsd_schedule(peak=1.0, warmup=10, stable=20, decay=10, floor=0.1)
+    assert float(lr(0)) == 0.0
+    assert float(lr(5)) == pytest.approx(0.5)
+    assert float(lr(15)) == pytest.approx(1.0)
+    assert float(lr(29)) == pytest.approx(1.0)
+    assert 0.1 <= float(lr(35)) < 1.0
+    assert float(lr(100)) == pytest.approx(0.1)
+
+
+def test_cosine_schedule_monotone_decay():
+    lr = cosine_schedule(peak=1.0, warmup=5, total=50)
+    vals = [float(lr(s)) for s in range(5, 50, 5)]
+    assert all(a >= b for a, b in zip(vals, vals[1:]))
+
+
+def test_int8_quantization_roundtrip_error_bounded():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal(1000).astype(np.float32))
+    q, scale = quantize_int8(x)
+    deq = dequantize_int8(q, scale)
+    assert q.dtype == jnp.int8
+    assert float(jnp.max(jnp.abs(x - deq))) <= float(scale) * 0.51
+
+
+def test_error_feedback_recovers_mean_signal():
+    """With error feedback, repeated compression of the same gradient must
+    not lose the residual: the accumulated update converges to the truth."""
+    rng = np.random.default_rng(1)
+    g = jnp.asarray(rng.standard_normal(512).astype(np.float32)) * 1e-3
+    residual = jnp.zeros_like(g)
+    total = jnp.zeros_like(g)
+    for _ in range(50):
+        x = g + residual
+        q, scale = quantize_int8(x)
+        deq = dequantize_int8(q, scale)
+        residual = x - deq
+        total = total + deq
+    np.testing.assert_allclose(np.asarray(total / 50), np.asarray(g),
+                               atol=float(scale) / 10)

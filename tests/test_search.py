@@ -1,0 +1,76 @@
+"""End-to-end GEVO-ML search behaviour on a tiny training workload."""
+
+import numpy as np
+import pytest
+
+from repro.core.fitness import InvalidVariant, static_time
+from repro.core.search import GevoML, describe_patch
+from repro.workloads.twofc import build_twofc_training_workload
+
+
+@pytest.fixture(scope="module")
+def tiny_workload():
+    return build_twofc_training_workload(
+        batch=32, hidden=32, steps=20, n_train=512, n_test=512,
+        time_mode="static")
+
+
+@pytest.fixture(scope="module")
+def result(tiny_workload):
+    search = GevoML(tiny_workload, pop_size=8, n_elite=4, seed=0,
+                    init_mutations=2)
+    return search.run(generations=3)
+
+
+def test_search_returns_nonempty_pareto(result):
+    assert len(result.pareto) >= 1
+    for ind in result.pareto:
+        assert np.isfinite(ind.fitness).all()
+
+
+def test_pareto_members_mutually_nondominating(result):
+    objs = np.array([i.fitness for i in result.pareto])
+    for i in range(len(objs)):
+        for j in range(len(objs)):
+            if i != j:
+                assert not (np.all(objs[i] <= objs[j])
+                            and np.any(objs[i] < objs[j]))
+
+
+def test_search_tracks_history(result):
+    assert len(result.history) == 3
+    assert result.history[-1]["evals"] > 0
+
+
+def test_pareto_not_worse_than_original(result):
+    """Elitism + NSGA-II: the front must weakly improve on the original in
+    at least one objective for every member."""
+    t0, e0 = result.original_fitness
+    for ind in result.pareto:
+        t, e = ind.fitness
+        assert t <= t0 * 1.001 or e <= e0 + 1e-9
+
+
+def test_describe_patch(result):
+    txt = describe_patch(result.pareto[0].edits)
+    assert isinstance(txt, str) and len(txt) > 0
+
+
+def test_static_time_positive(tiny_workload):
+    assert static_time(tiny_workload.program) > 0
+
+
+def test_invalid_variant_on_broken_program(tiny_workload):
+    import copy
+    prog = tiny_workload.program.clone()
+    prog.outputs = prog.outputs[:-1]  # drop one weight output
+    with pytest.raises(InvalidVariant):
+        tiny_workload.evaluate(prog)
+
+
+def test_fitness_cache_hits(tiny_workload):
+    s = GevoML(tiny_workload, pop_size=4, n_elite=2, seed=1,
+               init_mutations=1)
+    s.run(generations=2)
+    assert len(s._cache) <= s.n_evals + 1
+    assert s.n_evals < 4 * 3 * 3  # caching keeps evals bounded

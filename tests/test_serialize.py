@@ -1,0 +1,74 @@
+"""IR program / patch persistence + the tinyformer (attention-family)
+GEVO workload."""
+
+import numpy as np
+import pytest
+
+from repro.core.interp import evaluate
+from repro.core.mutation import apply_patch, random_edit
+from repro.core.serialize import (load_patches, load_program, save_patches,
+                                  save_program)
+from repro.workloads.tinyformer import (build_tinyformer_prediction_workload,
+                                        make_sequence_dataset)
+from repro.workloads.twofc import build_twofc_step
+
+
+def test_program_roundtrip(tmp_path):
+    p = build_twofc_step(batch=8, in_dim=16, hidden=8)
+    path = str(tmp_path / "prog")
+    save_program(p, path)
+    q = load_program(path)
+    q.verify()
+    assert str(p) == str(q)
+    ins = {"w1": np.ones((16, 8), np.float32), "b1": np.zeros(8, np.float32),
+           "w2": np.ones((8, 10), np.float32), "b2": np.zeros(10, np.float32),
+           "x": np.ones((8, 16), np.float32),
+           "y_onehot": np.eye(10, dtype=np.float32)[np.zeros(8, int)]}
+    a = evaluate(p, ins)
+    b = evaluate(q, ins)
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_mutated_program_roundtrip(tmp_path):
+    p = build_twofc_step(batch=4, in_dim=8, hidden=4)
+    rng = np.random.default_rng(0)
+    q = apply_patch(p, [random_edit(p, rng)])
+    path = str(tmp_path / "mut")
+    save_program(q, path)
+    r = load_program(path)
+    assert str(q) == str(r)
+
+
+def test_patch_roundtrip(tmp_path):
+    p = build_twofc_step(batch=4, in_dim=8, hidden=4)
+    rng = np.random.default_rng(1)
+    patches = [(random_edit(p, rng),), (random_edit(p, rng),)]
+    path = str(tmp_path / "patches.json")
+    save_patches(patches, path, fitnesses=[(1.0, 0.5), (2.0, 0.25)])
+    loaded = load_patches(path)
+    assert loaded == patches
+
+
+def test_sequence_dataset_learnable_structure():
+    x, y = make_sequence_dataset(64, seq=12, vocab=8, classes=3, seed=1)
+    assert x.shape == (64, 12) and set(np.unique(y)) <= {0, 1, 2}
+    x2, y2 = make_sequence_dataset(64, seq=12, vocab=8, classes=3, seed=1)
+    np.testing.assert_array_equal(x, x2)
+
+
+@pytest.mark.slow
+def test_tinyformer_workload_beats_random():
+    w = build_tinyformer_prediction_workload(n_eval=256, n_pretrain=2048,
+                                             steps=800)
+    _, err = w.evaluate(w.program)
+    assert err < 0.6  # random = 0.75
+
+
+def test_tinyformer_ir_structure():
+    w = build_tinyformer_prediction_workload(n_eval=128, n_pretrain=512,
+                                             steps=20)
+    ops = [op.opcode for op in w.program.ops]
+    assert "transpose" in ops           # attention head layout
+    assert ops.count("exponential") >= 2  # attention + output softmax chains
+    assert "dot" in ops

@@ -1,0 +1,64 @@
+"""Sharding-policy unit tests (mesh-free: we check PartitionSpec structure
+and divisibility fallbacks against fake mesh geometry)."""
+
+import jax
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.launch.shardings import _NO_RELOCATE, _fit
+
+
+def test_fit_basic_tp_fsdp():
+    spec = _fit(("fsdp", "model"), (4096, 8192), ("data",), "model", 16, 16)
+    assert spec == P(("data",), "model")
+
+
+def test_fit_leading_layer_dim_unsharded():
+    spec = _fit(("model", "fsdp", None), (61, 256, 7168, 2048),
+                ("data",), "model", 16, 16)
+    assert spec == P(None, "model", ("data",), None)
+
+
+def test_fit_indivisible_model_relocates_to_largest():
+    # 36 heads don't divide 16; model axis should relocate to a divisible dim
+    spec = _fit((None, "model"), (2304, 36), ("data",), "model", 16, 16)
+    assert spec == P("model", None)
+
+
+def test_fit_indivisible_with_no_relocate_replicates():
+    spec = _fit(("fsdp", "model", None), (2304, 36, 64), ("data",), "model",
+                16, 16, allow_relocate=False)
+    assert spec[1] is None and spec[2] is None
+
+
+def test_fit_small_tensors_skip_fsdp():
+    # tiny tensors never get FSDP (the all-gather costs more than it saves)
+    # but TP still applies when divisible
+    spec = _fit(("fsdp", "model"), (64, 128), ("data",), "model", 16, 16)
+    assert spec == P(None, "model")
+    big = _fit(("fsdp", "model"), (8192, 8192), ("data",), "model", 16, 16)
+    assert big == P(("data",), "model")
+
+
+def test_attention_params_in_no_relocate():
+    assert {"wq", "wk", "wv", "wo"} <= _NO_RELOCATE
+
+
+def test_param_specs_cover_opt_state(tmp_path):
+    """Adafactor r/c leaves inherit the param rule minus the reduced dim."""
+    import jax.numpy as jnp
+    from repro.launch.shardings import param_specs
+    from repro.optim.optimizers import adafactor
+
+    class FakeMesh:
+        axis_names = ("data", "model")
+        devices = np.empty((4, 2))
+
+    params = {"layers": {"mlp": {"gate": jnp.zeros((64, 8192, 4096))}}}
+    opt = adafactor()
+    state = jax.eval_shape(opt.init, params)
+    specs = param_specs(state, FakeMesh(), ("data",), "model")
+    f = specs["f"]["layers"]["mlp"]["gate"]
+    assert f["r"] == P(None, ("data",))       # (L, d): fsdp kept, ff dropped
+    assert f["c"] == P(None, "model")          # (L, ff): model kept

@@ -1,0 +1,55 @@
+"""End-to-end behaviour: the paper's claims at test scale.
+
+GEVO-ML searches the 2fcNet training-step IR and must produce a Pareto
+front that improves on the original program (the paper's Figure 4(b)
+structure), with the known gradient-scaling mechanism reachable by the
+mutation operators.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.mutation import apply_patch
+from repro.core.search import GevoML
+from repro.workloads.twofc import build_twofc_training_workload
+
+
+@pytest.fixture(scope="module")
+def search_result():
+    w = build_twofc_training_workload(batch=32, hidden=32, steps=60,
+                                      n_train=1024, n_test=512,
+                                      time_mode="static", lr=0.01)
+    s = GevoML(w, pop_size=10, n_elite=4, seed=42, init_mutations=2)
+    return w, s.run(generations=4)
+
+
+def test_gevo_finds_pareto_improvement(search_result):
+    """Some pareto member must strictly improve at least one objective
+    (time or error) over the original program — the paper's core claim."""
+    w, res = search_result
+    t0, e0 = res.original_fitness
+    improved = [i for i in res.pareto
+                if i.fitness[0] < t0 * 0.999 or i.fitness[1] < e0 - 1e-4]
+    assert improved, (
+        f"no Pareto improvement over original (t0={t0:.3e}, e0={e0:.3f}); "
+        f"front={[i.fitness for i in res.pareto]}")
+
+
+def test_pareto_programs_are_executable(search_result):
+    w, res = search_result
+    for ind in res.pareto[:4]:
+        prog = apply_patch(w.program, list(ind.edits))
+        t, e = w.evaluate(prog)   # re-evaluation must reproduce fitness
+        assert t == pytest.approx(ind.fitness[0], rel=1e-6)
+        assert e == pytest.approx(ind.fitness[1], abs=1e-6)
+
+
+def test_time_objective_improvements_are_real_deletions(search_result):
+    """Faster variants must be structurally smaller/cheaper programs."""
+    w, res = search_result
+    best_t = res.best_by_time()
+    t0, _ = res.original_fitness
+    if best_t.fitness[0] < t0 * 0.999:
+        prog = apply_patch(w.program, list(best_t.edits))
+        from repro.core.fitness import static_time
+        assert static_time(prog) < static_time(w.program)

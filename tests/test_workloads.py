@@ -1,0 +1,95 @@
+"""Paper workloads: datasets, 2fcNet training dynamics, MobileNet IR."""
+
+import numpy as np
+import pytest
+
+from repro.core.interp import evaluate
+from repro.workloads.datasets import synthetic_cifar10, synthetic_mnist
+from repro.workloads.mobilenet import (init_mobilenet, forward,
+                                       mobilenet_to_ir)
+from repro.workloads.twofc import (build_twofc_step,
+                                   build_twofc_training_workload)
+
+
+def test_synthetic_mnist_deterministic_and_shaped():
+    x1, y1, xt, yt = synthetic_mnist(256, 64)
+    x2, y2, _, _ = synthetic_mnist(256, 64)
+    np.testing.assert_array_equal(x1, x2)
+    assert x1.shape == (256, 784) and xt.shape == (64, 784)
+    assert set(np.unique(y1)) <= set(range(10))
+
+
+def test_synthetic_cifar_shapes():
+    x, y, xt, yt = synthetic_cifar10(128, 32)
+    assert x.shape == (128, 32, 32, 3) and xt.shape == (32, 32, 32, 3)
+
+
+def test_twofc_step_program_is_figure5_shaped():
+    p = build_twofc_step(batch=32, hidden=64)
+    ops = [op.opcode for op in p.ops]
+    # the signature ops of Figure 5: softmax chain + 1/batch multiply +
+    # reduce for the bias grad + SGD subtracts
+    assert "exponential" in ops and "divide" in ops
+    assert ops.count("subtract") >= 5
+    assert len(p.outputs) == 4
+
+
+def test_twofc_training_reduces_error():
+    w = build_twofc_training_workload(batch=32, hidden=64, steps=400,
+                                      n_train=2048, n_test=1024)
+    t, err = w.evaluate(w.program)
+    assert err < 0.5, f"400-step training should beat random (err={err})"
+    w_short = build_twofc_training_workload(batch=32, hidden=64, steps=20,
+                                            n_train=2048, n_test=1024)
+    _, err_short = w_short.evaluate(w_short.program)
+    assert err < err_short, "more steps must reduce error"
+
+
+def test_twofc_larger_gradient_improves_like_paper():
+    """The paper's key training-mutation finding: scaling up the gradient
+    (lr 0.01 -> 0.3) improves accuracy in this regime (Sec 6.2)."""
+    lo = build_twofc_training_workload(steps=150, lr=0.01, n_train=2048,
+                                       n_test=1024)
+    hi = build_twofc_training_workload(steps=150, lr=0.3, n_train=2048,
+                                       n_test=1024)
+    _, err_lo = lo.evaluate(lo.program)
+    _, err_hi = hi.evaluate(hi.program)
+    assert err_hi < err_lo
+
+
+@pytest.fixture(scope="module")
+def tiny_mobilenet():
+    params = init_mobilenet(alpha=0.125, seed=0)
+    return params
+
+
+def test_mobilenet_forward_shapes(tiny_mobilenet):
+    x = np.random.RandomState(0).randn(2, 32, 32, 3).astype(np.float32)
+    logits, _ = forward(tiny_mobilenet, x, train=False)
+    assert logits.shape == (2, 10)
+    assert np.all(np.isfinite(logits))
+
+
+def test_mobilenet_ir_matches_jax_forward(tiny_mobilenet):
+    """The baked IR program must agree with the reference jax forward."""
+    x = np.random.RandomState(1).randn(4, 32, 32, 3).astype(np.float32)
+    ref_logits, _ = forward(tiny_mobilenet, x, train=False)
+    e = np.exp(ref_logits - np.max(ref_logits, -1, keepdims=True))
+    ref_probs = e / e.sum(-1, keepdims=True)
+    prog = mobilenet_to_ir(tiny_mobilenet, batch=4)
+    (probs,) = evaluate(prog, {"images": x})
+    np.testing.assert_allclose(np.asarray(probs), np.asarray(ref_probs),
+                               atol=2e-4)
+
+
+def test_mobilenet_ir_layer_census(tiny_mobilenet):
+    """Table 1: depthwise convs, standard convs, BN per conv, 1 avg pool,
+    2 FC layers."""
+    prog = mobilenet_to_ir(tiny_mobilenet, batch=1)
+    convs = [op for op in prog.ops if op.opcode == "conv"]
+    dw = [op for op in convs if op.attrs.get("feature_group_count", 1) > 1]
+    std = [op for op in convs if op.attrs.get("feature_group_count", 1) == 1]
+    pools = [op for op in prog.ops if op.opcode == "avg_pool"]
+    assert len(dw) == 10 and len(std) == 11  # 10 blocks + stem (32x32 variant)
+    assert len(pools) == 1
+    assert len([op for op in prog.ops if op.opcode == "rsqrt"]) == 21  # BNs
