@@ -1,11 +1,21 @@
-"""§Perf A/B measurements for the three hillclimbed cells.
+"""§Perf A/B measurements.
 
-For each cell, measures (under the FINAL roofline analyzer, so numbers are
-comparable) the paper-faithful BASELINE configuration and each optimization
-step, writing experiments/perf/<cell>.json.  This is the machine-readable
-source for the EXPERIMENTS.md §Perf iteration log.
+Two suites (select with ``--suite {cells,evaluator,all}``):
+
+* ``cells`` (default) — for each hillclimbed model cell, measures (under the
+  FINAL roofline analyzer, so numbers are comparable) the paper-faithful
+  BASELINE configuration and each optimization step, writing
+  experiments/perf/<cell>.json.  This is the machine-readable source for the
+  EXPERIMENTS.md §Perf iteration log.
+
+* ``evaluator`` — A/Bs the GEVO-ML evaluation engine on the 2fcNet search:
+  SerialEvaluator vs ParallelEvaluator (``--workers N``) generation
+  wall-clock, plus a warm-persistent-cache rerun; reports per-generation
+  wall time, evaluation counts, and cache hit rates, writing
+  experiments/perf/evaluator_ab.json.
 
   PYTHONPATH=src python -m benchmarks.perf_ab
+  PYTHONPATH=src python -m benchmarks.perf_ab --suite evaluator --workers 2
 """
 
 from __future__ import annotations
@@ -15,7 +25,9 @@ import os
 os.environ.setdefault("XLA_FLAGS",
                       "--xla_force_host_platform_device_count=512")
 
+import argparse  # noqa: E402
 import json  # noqa: E402
+import time  # noqa: E402
 
 from repro.configs import get_config  # noqa: E402
 from repro.launch.dryrun import run_cell  # noqa: E402
@@ -39,7 +51,78 @@ def run(tag: str, arch: str, shape: str, cfg, micro: int = 1) -> dict:
     return rec
 
 
-def main():
+def _gen_walls(history: list[dict]) -> list[float]:
+    walls, prev = [], 0.0
+    for h in history:
+        walls.append(h["wall_s"] - prev)
+        prev = h["wall_s"]
+    return [round(w, 4) for w in walls]
+
+
+def evaluator_ab(workers: int = 2, generations: int = 4) -> dict:
+    """Serial vs parallel vs warm-cache search wall-clock on one workload.
+
+    All three runs use seed 0 in ``static`` fitness mode, so they evaluate
+    the *same* variants and reach the same Pareto front — the A/B isolates
+    the evaluation engine."""
+    import tempfile
+
+    from repro.core.evaluator import (FitnessCache, ParallelEvaluator,
+                                      SerialEvaluator)
+    from repro.core.search import GevoML
+    from repro.workloads.twofc import build_twofc_training_workload
+
+    w = build_twofc_training_workload(batch=32, hidden=64, steps=60,
+                                      n_train=2048, n_test=1024)
+    cache_path = os.path.join(tempfile.mkdtemp(prefix="gevoml_ab_"),
+                              "fitness.jsonl")
+
+    def measure(tag, make_ev):
+        ev = make_ev()
+        s = GevoML(w, pop_size=10, n_elite=5, seed=0, evaluator=ev)
+        t0 = time.perf_counter()
+        res = s.run(generations=generations)
+        wall = time.perf_counter() - t0
+        rec = {"wall_s": round(wall, 4),
+               "gen_wall_s": _gen_walls(res.history),
+               "n_evals": s.n_evals,
+               "cache_hits": s.cache.hits,
+               "cache_hit_rate": round(s.cache.hit_rate, 4),
+               "pareto": [list(i.fitness) for i in res.pareto]}
+        ev.close()
+        print(f"[evaluator_ab] {tag}: wall={wall:.2f}s evals={s.n_evals} "
+              f"hit_rate={s.cache.hit_rate:.0%}")
+        return rec
+
+    out = {
+        "workers": workers,
+        "generations": generations,
+        "serial": measure(
+            "serial", lambda: SerialEvaluator(w)),
+        "parallel": measure(
+            f"parallel x{workers}",
+            lambda: ParallelEvaluator(w, n_workers=workers,
+                                      cache=FitnessCache(cache_path))),
+        # rerun against the persistent cache the parallel run just filled
+        "parallel_warm_cache": measure(
+            "parallel warm cache",
+            lambda: ParallelEvaluator(w, n_workers=workers,
+                                      cache=FitnessCache(cache_path))),
+    }
+    assert out["serial"]["pareto"] == out["parallel"]["pareto"], \
+        "parallel evaluation diverged from serial (static mode must match)"
+    out["speedup_parallel_vs_serial"] = round(
+        out["serial"]["wall_s"] / max(out["parallel"]["wall_s"], 1e-9), 3)
+    os.makedirs(OUT, exist_ok=True)
+    path = os.path.join(OUT, "evaluator_ab.json")
+    json.dump(out, open(path, "w"), indent=1)
+    print(f"[evaluator_ab] wrote {path}; serial/parallel speedup="
+          f"{out['speedup_parallel_vs_serial']}x, warm-cache evals="
+          f"{out['parallel_warm_cache']['n_evals']}")
+    return out
+
+
+def run_cells():
     os.makedirs(OUT, exist_ok=True)
 
     # ---- cell A: zamba2-1.2b train_4k (worst roofline fraction) ----------
@@ -85,6 +168,20 @@ def main():
     run("deepseek_decode_0_gather", "deepseek-v3-671b", "decode_32k",
         d.scaled(moe_mode="dense"))
     run("deepseek_decode_1_ep_a2a", "deepseek-v3-671b", "decode_32k", d)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--suite", choices=("cells", "evaluator", "all"),
+                    default="cells")
+    ap.add_argument("--workers", type=int, default=2,
+                    help="ParallelEvaluator workers for --suite evaluator")
+    ap.add_argument("--generations", type=int, default=4)
+    args = ap.parse_args()
+    if args.suite in ("cells", "all"):
+        run_cells()
+    if args.suite in ("evaluator", "all"):
+        evaluator_ab(workers=args.workers, generations=args.generations)
 
 
 if __name__ == "__main__":

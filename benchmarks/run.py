@@ -9,7 +9,10 @@
 
 Prints ``name,us_per_call,derived`` CSV rows (derived carries the
 benchmark-specific headline number).  ``--full`` raises search budgets
-toward the paper's scale.
+toward the paper's scale.  ``--parallel N`` runs the search benches through
+an N-worker ParallelEvaluator; ``--cache-dir D`` gives them a persistent
+fitness cache (rerun to see hit rates climb).  Serial-vs-parallel A/B
+timing lives in ``benchmarks/perf_ab.py --suite evaluator``.
 """
 
 from __future__ import annotations
@@ -30,6 +33,19 @@ def _row(name: str, us: float, derived: str) -> None:
     print(f"{name},{us:.1f},{derived}")
 
 
+# Evaluation-engine options for the search benches (set in main()).
+OPTS = {"parallel": 0, "cache_dir": None}
+
+
+def _make_evaluator(workload, tag: str):
+    from repro.core.evaluator import make_evaluator
+
+    cache_path = (os.path.join(OPTS["cache_dir"], f"{tag}.jsonl")
+                  if OPTS["cache_dir"] else None)
+    return make_evaluator(workload, parallel=OPTS["parallel"],
+                          cache_path=cache_path)
+
+
 # ---------------------------------------------------------------------------
 
 def bench_2fcnet(full: bool) -> None:
@@ -41,9 +57,10 @@ def bench_2fcnet(full: bool) -> None:
                                       n_train=4096, n_test=2000, lr=0.01)
     t0 = time.perf_counter()
     s = GevoML(w, pop_size=16 if full else 12, n_elite=8 if full else 6,
-               seed=0)
+               seed=0, evaluator=_make_evaluator(w, "fig4b_2fcnet"))
     res = s.run(generations=8 if full else 5)
     wall = time.perf_counter() - t0
+    s.evaluator.close()
     to, eo = res.original_fitness
     be = res.best_by_error()
     bt = res.best_by_time()
@@ -52,7 +69,8 @@ def bench_2fcnet(full: bool) -> None:
          f" best_err={be.fitness[1]:.4f}"
          f" best_time={bt.fitness[0]:.3e}"
          f" err_improve={eo - be.fitness[1]:+.4f}"
-         f" pareto={len(res.pareto)} evals={s.n_evals}")
+         f" pareto={len(res.pareto)} evals={s.n_evals}"
+         f" cache_hit={s.cache.hit_rate:.0%}")
     for i, ind in enumerate(res.pareto[:8]):
         _row(f"fig4b_pareto_{i}", 0.0,
              f"t={ind.fitness[0]:.3e};err={ind.fitness[1]:.4f}")
@@ -69,9 +87,10 @@ def bench_mobilenet(full: bool) -> None:
         pretrain_epochs=4 if full else 2)
     t0 = time.perf_counter()
     s = GevoML(w, pop_size=12 if full else 10, n_elite=6 if full else 5,
-               seed=0)
+               seed=0, evaluator=_make_evaluator(w, "fig4a_mobilenet"))
     res = s.run(generations=6 if full else 4)
     wall = time.perf_counter() - t0
+    s.evaluator.close()
     to, eo = res.original_fitness
     bt = res.best_by_time()
     # paper headline: % runtime improvement at <=2% accuracy loss
@@ -81,7 +100,8 @@ def bench_mobilenet(full: bool) -> None:
     _row("fig4a_mobilenet_search", wall * 1e6,
          f"orig(t={to:.3e};err={eo:.4f})"
          f" runtime_improve@2%acc={speedup:.1f}%"
-         f" pareto={len(res.pareto)} evals={s.n_evals}")
+         f" pareto={len(res.pareto)} evals={s.n_evals}"
+         f" cache_hit={s.cache.hit_rate:.0%}")
     for i, ind in enumerate(res.pareto[:8]):
         _row(f"fig4a_pareto_{i}", 0.0,
              f"t={ind.fitness[0]:.3e};err={ind.fitness[1]:.4f}")
@@ -218,7 +238,16 @@ def main() -> None:
     ap.add_argument("--only", default=None)
     ap.add_argument("--full", action="store_true",
                     help="paper-scale budgets (slow)")
+    ap.add_argument("--parallel", type=int, default=0,
+                    help="evaluation workers for the search benches "
+                         "(0/1 = serial)")
+    ap.add_argument("--cache-dir", default=None,
+                    help="directory for persistent fitness caches")
     args, _ = ap.parse_known_args()
+    OPTS["parallel"] = args.parallel
+    OPTS["cache_dir"] = args.cache_dir
+    if args.cache_dir:
+        os.makedirs(args.cache_dir, exist_ok=True)
     print("name,us_per_call,derived")
     for name, fn in BENCHES.items():
         if args.only and args.only not in name:

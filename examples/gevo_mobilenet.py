@@ -17,6 +17,7 @@ import time
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
+from repro.core.evaluator import make_evaluator
 from repro.core.search import GevoML, describe_patch
 from repro.workloads.mobilenet import build_mobilenet_prediction_workload
 
@@ -25,6 +26,11 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true",
                     help="larger model / eval set / budget (slow)")
+    ap.add_argument("--parallel", type=int, default=0,
+                    help="evaluation worker processes (0/1 = in-process); "
+                         "the pretrained workload ships to workers whole")
+    ap.add_argument("--cache", default=None,
+                    help="persistent fitness cache path (JSONL)")
     args = ap.parse_args()
 
     t0 = time.time()
@@ -38,9 +44,13 @@ def main():
     print(f"  baked IR: {len(w.program.ops)} ops; original time={tt:.3e}s "
           f"err={ee:.4f}  [{time.time()-t0:.0f}s]")
 
+    evaluator = make_evaluator(w, parallel=args.parallel,
+                               cache_path=args.cache)
     s = GevoML(w, pop_size=12 if args.full else 8,
-               n_elite=6 if args.full else 4, seed=0, verbose=True)
+               n_elite=6 if args.full else 4, seed=0, verbose=True,
+               evaluator=evaluator)
     res = s.run(generations=6 if args.full else 3)
+    evaluator.close()
 
     print("\nPareto front:")
     t0_, e0 = res.original_fitness

@@ -5,17 +5,42 @@ NSGA-II evolves Copy/Delete patches of the training-step IR, and the Pareto
 front trades runtime against model error.  Run:
 
     PYTHONPATH=src python examples/quickstart.py
+
+Evaluation-engine flags (see README "Evaluation engine"):
+
+    --parallel N        evaluate variants in N worker processes
+    --cache PATH        persistent fitness cache (JSONL); rerun with the
+                        same path and the search re-measures nothing
+    --checkpoint DIR    write per-generation snapshots
+    --resume            continue from the latest snapshot in --checkpoint
 """
 
-import sys
+import argparse
 import os
+import sys
+
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
+from repro.core.evaluator import make_evaluator
 from repro.core.search import GevoML, describe_patch
 from repro.workloads.twofc import build_twofc_training_workload
 
 
 def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--parallel", type=int, default=0,
+                    help="evaluation worker processes (0/1 = in-process)")
+    ap.add_argument("--cache", default=None,
+                    help="persistent fitness cache path (JSONL)")
+    ap.add_argument("--checkpoint", default=None,
+                    help="checkpoint directory (one snapshot per generation)")
+    ap.add_argument("--resume", action="store_true",
+                    help="resume from the latest checkpoint in --checkpoint")
+    ap.add_argument("--generations", type=int, default=5)
+    args = ap.parse_args()
+    if args.resume and not args.checkpoint:
+        ap.error("--resume requires --checkpoint")
+
     print("Building 2fcNet training workload (one SGD step as IR)...")
     w = build_twofc_training_workload(batch=32, hidden=64, steps=80,
                                       n_train=2048, n_test=1024, lr=0.01)
@@ -24,9 +49,14 @@ def main():
     t0, e0 = w.evaluate(w.program)
     print(f"  original fitness: time={t0:.3e}s  error={e0:.4f}\n")
 
-    print("Running GEVO-ML (NSGA-II, pop=12, 5 generations)...")
-    search = GevoML(w, pop_size=12, n_elite=6, seed=0, verbose=True)
-    res = search.run(generations=5)
+    mode = (f"{args.parallel} workers" if args.parallel > 1 else "serial")
+    print(f"Running GEVO-ML (NSGA-II, pop=12, {args.generations} "
+          f"generations, {mode} evaluation)...")
+    evaluator = make_evaluator(w, parallel=args.parallel,
+                               cache_path=args.cache)
+    search = GevoML(w, pop_size=12, n_elite=6, seed=0, verbose=True,
+                    evaluator=evaluator, checkpoint_dir=args.checkpoint)
+    res = search.run(generations=args.generations, resume=args.resume)
 
     print("\nPareto front (argmin(time, error)):")
     for ind in res.pareto:
@@ -41,7 +71,11 @@ def main():
     be = res.best_by_error()
     print(f"\nbest error {be.fitness[1]:.4f} vs original {e0:.4f} "
           f"({search.n_evals} fitness evaluations, "
-          f"{search.n_invalid} invalid variants resampled)")
+          f"{search.n_invalid} invalid variants resampled, "
+          f"cache hit rate {search.cache.hit_rate:.0%})")
+    if args.cache:
+        print(f"fitness cache: {len(search.cache)} entries at {args.cache}")
+    evaluator.close()
 
 
 if __name__ == "__main__":

@@ -1,3 +1,14 @@
-# The paper's primary contribution — implement the SYSTEM here
-# (scheduler, optimizer, data path, serving loop, etc.) in the
-# host framework. Add sibling subpackages for substrates.
+"""The GEVO-ML system: HLO-lite IR, mutation/crossover operators, NSGA-II,
+the generational search loop, and the evaluation engine (persistent fitness
+cache + serial/parallel evaluators).  See docs/ARCHITECTURE.md for the
+module map and DESIGN.md for representation details."""
+
+from .evaluator import (EvalOutcome, FitnessCache, ParallelEvaluator,
+                        SerialEvaluator, WorkloadSpec, make_evaluator)
+from .search import GevoML, Individual, SearchResult, describe_patch
+
+__all__ = [
+    "EvalOutcome", "FitnessCache", "ParallelEvaluator", "SerialEvaluator",
+    "WorkloadSpec", "make_evaluator",
+    "GevoML", "Individual", "SearchResult", "describe_patch",
+]

@@ -1,0 +1,387 @@
+"""The GEVO-ML evaluation engine: cached, batched, optionally parallel.
+
+Search cost is dominated by fitness evaluation — every variant in every
+generation must be executed (arXiv 2208.12350 shows evaluation throughput is
+what limits search depth).  This module factors evaluation out of the search
+loop into three composable pieces:
+
+* :class:`FitnessCache` — a content-addressed fitness store.  Keys are
+  ``serialize.patch_key(workload_fingerprint, edits)``: the fingerprint
+  covers the program *and* the evaluation protocol around it (steps, data
+  sizes, time_mode), and a patch applied to a program fully determines the
+  variant (edits carry their own repair seeds) — so a fitness measured once
+  is valid forever.  With a ``path`` the cache is
+  **persistent**: an append-only JSONL file that warm-starts repeated and
+  resumed runs, which then re-measure nothing they have already seen.
+
+* :class:`SerialEvaluator` — in-process evaluation; the paper's behavior.
+
+* :class:`ParallelEvaluator` — a multiprocess worker pool.  Each worker owns
+  its **own JAX context** (workers are spawned, not forked, so XLA state is
+  never shared) and receives a contiguous *batch* of variants per dispatch.
+  Workloads travel to workers by pickle when possible, else are rebuilt from
+  a :class:`WorkloadSpec` factory (closures such as
+  ``TrainingWorkload.eval_fn`` do not pickle).  In ``static`` time mode
+  fitness is deterministic, so parallel results are bit-identical to serial;
+  ``inline_static=True`` additionally short-circuits static-mode evaluation
+  in the parent process without spinning up workers at all.
+
+Evaluators consume whole batches (``evaluate_batch``) so the search loop can
+speculatively generate a generation's worth of candidates and amortize
+dispatch; duplicate patches within a batch are evaluated once.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import importlib
+import json
+import multiprocessing as mp
+import os
+import pickle
+from dataclasses import dataclass, replace
+
+from .fitness import InvalidVariant
+from .mutation import Edit, EditError, apply_patch
+from .serialize import patch_key, program_fingerprint
+
+# --------------------------------------------------------------------------
+# Outcomes
+# --------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class EvalOutcome:
+    """Result of evaluating one patch: a fitness tuple or an invalidity
+    reason.  ``cached`` marks outcomes served from the cache."""
+
+    fitness: tuple[float, float] | None
+    error: str | None = None
+    cached: bool = False
+
+    @property
+    def ok(self) -> bool:
+        return self.fitness is not None
+
+    def to_doc(self) -> dict:
+        return {"fitness": list(self.fitness) if self.fitness else None,
+                "error": self.error}
+
+    @staticmethod
+    def from_doc(d: dict) -> "EvalOutcome":
+        fit = tuple(d["fitness"]) if d.get("fitness") else None
+        return EvalOutcome(fitness=fit, error=d.get("error"))
+
+
+# --------------------------------------------------------------------------
+# Persistent content-addressed fitness cache
+# --------------------------------------------------------------------------
+
+
+class FitnessCache:
+    """Fitness store keyed by canonical patch hash.
+
+    In-memory always; append-only JSONL on disk when ``path`` is given.
+    Invalid outcomes are cached too — a variant known to fail is never
+    re-executed.  The JSONL format is crash-safe (a torn final line is
+    dropped on load) and mergeable (concatenate files from several runs).
+
+    Caveat: the fitness layer folds *any* execution failure into
+    invalidity, so a transient crash (OOM, backend error) would be
+    remembered forever; pass ``persist_invalid=False`` to keep invalid
+    outcomes in-memory only when sharing a cache across heterogeneous
+    machines (costs re-evaluating invalid variants on each fresh run)."""
+
+    def __init__(self, path: str | None = None, *,
+                 persist_invalid: bool = True):
+        self.path = path
+        self.persist_invalid = persist_invalid
+        self._mem: dict[str, EvalOutcome] = {}
+        self.hits = 0
+        self.misses = 0
+        self._fh = None
+        if path:
+            d = os.path.dirname(path)
+            if d:
+                os.makedirs(d, exist_ok=True)
+            if os.path.exists(path):
+                with open(path) as f:
+                    for line in f:
+                        line = line.strip()
+                        if not line:
+                            continue
+                        try:
+                            rec = json.loads(line)
+                        except json.JSONDecodeError:
+                            continue  # torn tail from a crashed writer
+                        self._mem[rec["key"]] = EvalOutcome.from_doc(rec)
+            self._fh = open(path, "a")
+
+    def __len__(self) -> int:
+        return len(self._mem)
+
+    def __contains__(self, key: str) -> bool:
+        return key in self._mem
+
+    def get(self, key: str) -> EvalOutcome | None:
+        out = self._mem.get(key)
+        if out is None:
+            return None
+        return replace(out, cached=True)
+
+    def put(self, key: str, outcome: EvalOutcome) -> None:
+        if key in self._mem:
+            return
+        outcome = replace(outcome, cached=False)
+        self._mem[key] = outcome
+        if self._fh is not None and (outcome.ok or self.persist_invalid):
+            rec = {"key": key}
+            rec.update(outcome.to_doc())
+            self._fh.write(json.dumps(rec) + "\n")
+            self._fh.flush()
+
+    @property
+    def hit_rate(self) -> float:
+        total = self.hits + self.misses
+        return self.hits / total if total else 0.0
+
+    def stats(self) -> dict:
+        return {"entries": len(self._mem), "hits": self.hits,
+                "misses": self.misses, "hit_rate": self.hit_rate,
+                "persistent": self.path is not None}
+
+    def close(self) -> None:
+        if self._fh is not None:
+            self._fh.close()
+            self._fh = None
+
+
+# --------------------------------------------------------------------------
+# Workload transport for worker processes
+# --------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class WorkloadSpec:
+    """Recipe for rebuilding a workload inside a worker process:
+    ``factory`` is a ``"module.path:callable"`` reference and ``kwargs`` its
+    keyword arguments.  The factory must be **deterministic** (same kwargs →
+    same program, data, and eval function) or parallel evaluation would
+    diverge from serial; the builders in ``repro.workloads`` are."""
+
+    factory: str
+    kwargs: tuple[tuple[str, object], ...]
+
+    @staticmethod
+    def make(factory: str, **kwargs) -> "WorkloadSpec":
+        return WorkloadSpec(factory=factory, kwargs=tuple(sorted(kwargs.items())))
+
+    def build(self):
+        mod_name, _, attr = self.factory.partition(":")
+        fn = getattr(importlib.import_module(mod_name), attr)
+        return fn(**dict(self.kwargs))
+
+
+def workload_fingerprint(workload) -> str:
+    """Content hash of everything that determines a fitness value: the
+    program AND the evaluation protocol around it (steps, data sizes,
+    time_mode, ... — fitness is e.g. ``static_time(program) * steps``).
+    The protocol part comes from the builder's WorkloadSpec kwargs when
+    present, else from the workload's scalar dataclass-ish fields."""
+    spec = getattr(workload, "spec", None)
+    if spec is not None:
+        proto = {"factory": spec.factory,
+                 "kwargs": [[k, repr(v)] for k, v in spec.kwargs]}
+    else:
+        proto = {k: repr(v) for k, v in sorted(vars(workload).items())
+                 if isinstance(v, (int, float, str, bool, type(None)))}
+    h = hashlib.sha256()
+    h.update(program_fingerprint(workload.program).encode())
+    h.update(json.dumps(proto, sort_keys=True).encode())
+    return h.hexdigest()
+
+
+_WORKER_WORKLOAD = None
+
+
+def _worker_init(payload: dict) -> None:
+    """Pool initializer: materialize the workload once per worker.  Runs in a
+    freshly spawned interpreter, so this worker owns its JAX context."""
+    global _WORKER_WORKLOAD
+    if payload.get("pickled") is not None:
+        _WORKER_WORKLOAD = pickle.loads(payload["pickled"])
+    else:
+        _WORKER_WORKLOAD = payload["spec"].build()
+
+
+def _worker_eval(edits: tuple[Edit, ...]):
+    try:
+        program = apply_patch(_WORKER_WORKLOAD.program, list(edits))
+        return ("ok", _WORKER_WORKLOAD.evaluate(program))
+    except (EditError, InvalidVariant) as e:
+        return ("invalid", str(e))
+
+
+# --------------------------------------------------------------------------
+# Evaluators
+# --------------------------------------------------------------------------
+
+
+class Evaluator:
+    """Batch fitness evaluation against one workload, through the cache.
+
+    ``evaluate_batch`` preserves input order, dedupes identical patches
+    within the batch, serves cache hits without dispatch, and records every
+    fresh outcome (valid or invalid) back into the cache."""
+
+    def __init__(self, workload, cache: FitnessCache | None = None):
+        self.workload = workload
+        self.cache = cache if cache is not None else FitnessCache()
+        self.fingerprint = workload_fingerprint(workload)
+        self.n_evals = 0    # actual executions (cache misses evaluated)
+        self.n_invalid = 0  # executions that came back invalid
+
+    def key(self, edits) -> str:
+        return patch_key(self.fingerprint, tuple(edits))
+
+    def evaluate_batch(self, patches) -> list[EvalOutcome]:
+        patches = [tuple(p) for p in patches]
+        outcomes: list[EvalOutcome | None] = [None] * len(patches)
+        fresh: dict[str, list[int]] = {}   # key -> positions, insertion order
+        for i, p in enumerate(patches):
+            k = self.key(p)
+            hit = self.cache.get(k)
+            if hit is not None:
+                self.cache.hits += 1
+                outcomes[i] = hit
+            else:
+                if k not in fresh:
+                    self.cache.misses += 1
+                fresh.setdefault(k, []).append(i)
+        if fresh:
+            todo = [patches[ixs[0]] for ixs in fresh.values()]
+            results = self._evaluate_misses(todo)
+            for (k, ixs), out in zip(fresh.items(), results):
+                self.cache.put(k, out)
+                self.n_evals += 1
+                if not out.ok:
+                    self.n_invalid += 1
+                for i in ixs:
+                    outcomes[i] = out
+        return outcomes  # type: ignore[return-value]
+
+    def evaluate_one(self, edits) -> EvalOutcome:
+        return self.evaluate_batch([edits])[0]
+
+    def _evaluate_misses(self, patches) -> list[EvalOutcome]:
+        raise NotImplementedError
+
+    def _evaluate_inline(self, patches) -> list[EvalOutcome]:
+        out = []
+        for edits in patches:
+            try:
+                program = apply_patch(self.workload.program, list(edits))
+                out.append(EvalOutcome(fitness=self.workload.evaluate(program)))
+            except (EditError, InvalidVariant) as e:
+                out.append(EvalOutcome(fitness=None, error=str(e)))
+        return out
+
+    def stats(self) -> dict:
+        s = self.cache.stats()
+        s.update({"n_evals": self.n_evals, "n_invalid": self.n_invalid})
+        return s
+
+    def close(self) -> None:
+        self.cache.close()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+        return False
+
+
+class SerialEvaluator(Evaluator):
+    """In-process evaluation — the paper's (and the previous search loop's)
+    behavior, now with batch dedupe and the persistent cache."""
+
+    _evaluate_misses = Evaluator._evaluate_inline
+
+
+class ParallelEvaluator(Evaluator):
+    """Multiprocess evaluation: ``n_workers`` spawned workers, each with its
+    own JAX context, each receiving a contiguous batch per dispatch.
+
+    The pool is created lazily on the first cache-missing batch, so a fully
+    warm cache never pays worker startup.  With ``inline_static=True`` and a
+    ``static``-time-mode workload, evaluation short-circuits to the parent
+    process (static fitness is deterministic roofline arithmetic + one
+    deterministic execution — worker processes buy nothing on small
+    programs)."""
+
+    def __init__(self, workload, *, n_workers: int = 2,
+                 cache: FitnessCache | None = None,
+                 spec: WorkloadSpec | None = None,
+                 inline_static: bool = False,
+                 chunk_size: int | None = None,
+                 start_method: str = "spawn"):
+        super().__init__(workload, cache)
+        if n_workers < 1:
+            raise ValueError("n_workers must be >= 1")
+        self.n_workers = n_workers
+        self.spec = spec if spec is not None else getattr(workload, "spec", None)
+        self.inline_static = inline_static
+        self.chunk_size = chunk_size
+        self.start_method = start_method
+        self._pool = None
+
+    # -- pool management ----------------------------------------------------
+    def _payload(self) -> dict:
+        try:
+            return {"pickled": pickle.dumps(self.workload)}
+        except Exception:
+            if self.spec is None:
+                raise ValueError(
+                    f"workload {getattr(self.workload, 'name', '?')!r} is not "
+                    "picklable and has no WorkloadSpec; pass spec= or use a "
+                    "workload builder that attaches one")
+            return {"pickled": None, "spec": self.spec}
+
+    def _ensure_pool(self):
+        if self._pool is None:
+            ctx = mp.get_context(self.start_method)
+            self._pool = ctx.Pool(self.n_workers, initializer=_worker_init,
+                                  initargs=(self._payload(),))
+        return self._pool
+
+    # -- dispatch -----------------------------------------------------------
+    def _evaluate_misses(self, patches) -> list[EvalOutcome]:
+        if (self.inline_static
+                and getattr(self.workload, "time_mode", None) == "static"):
+            return self._evaluate_inline(patches)
+        pool = self._ensure_pool()
+        chunk = self.chunk_size or max(
+            1, (len(patches) + self.n_workers - 1) // self.n_workers)
+        raw = pool.map(_worker_eval, patches, chunksize=chunk)
+        return [EvalOutcome(fitness=r[1]) if r[0] == "ok"
+                else EvalOutcome(fitness=None, error=r[1]) for r in raw]
+
+    def close(self) -> None:
+        if self._pool is not None:
+            self._pool.close()
+            self._pool.join()
+            self._pool = None
+        super().close()
+
+
+def make_evaluator(workload, *, parallel: int = 0,
+                   cache_path: str | None = None,
+                   inline_static: bool = False) -> Evaluator:
+    """Convenience constructor used by the CLI surfaces (examples,
+    benchmarks): ``parallel`` <= 1 gives a SerialEvaluator."""
+    cache = FitnessCache(cache_path)
+    if parallel and parallel > 1:
+        return ParallelEvaluator(workload, n_workers=parallel, cache=cache,
+                                 inline_static=inline_static)
+    return SerialEvaluator(workload, cache=cache)

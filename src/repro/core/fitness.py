@@ -74,6 +74,9 @@ class PredictionWorkload:
     batch: int = 256
     time_mode: str = "static"
     kind: str = "prediction"
+    # rebuild recipe for ParallelEvaluator workers (see core/evaluator.py);
+    # optional — this workload also pickles whole
+    spec: object | None = None
 
     def evaluate(self, program: Program) -> tuple[float, float]:
         try:
@@ -123,6 +126,9 @@ class TrainingWorkload:
     num_classes: int = 10
     time_mode: str = "static"
     kind: str = "training"
+    # rebuild recipe for ParallelEvaluator workers (see core/evaluator.py);
+    # required for parallel eval: eval_fn is a closure and does not pickle
+    spec: object | None = None
 
     def _batches(self):
         n = (len(self.train_x) // self.batch) * self.batch

@@ -94,11 +94,19 @@ def tournament(rng: np.random.Generator, rank: np.ndarray,
     return best
 
 
-def select_elites(objs: np.ndarray, n_elite: int) -> list[int]:
-    """Indices of the n_elite best individuals by (rank, crowding)."""
+def rank_select(objs: np.ndarray, n_elite: int
+                ) -> tuple[np.ndarray, np.ndarray, list[int]]:
+    """One-pass environmental selection: returns (rank, crowding,
+    elite_indices).  The search loop needs all three every generation —
+    computing them together avoids ranking the population twice."""
     rank, crowd = rank_population(objs)
     order = sorted(range(len(objs)), key=lambda i: (rank[i], -crowd[i]))
-    return order[:n_elite]
+    return rank, crowd, order[:n_elite]
+
+
+def select_elites(objs: np.ndarray, n_elite: int) -> list[int]:
+    """Indices of the n_elite best individuals by (rank, crowding)."""
+    return rank_select(objs, n_elite)[2]
 
 
 def pareto_front(objs: np.ndarray) -> list[int]:

@@ -9,22 +9,37 @@ Generation structure per the paper:
   * invalid variants (failed execution / un-applicable patches) are
     resampled until a valid individual is found.
 
-Fitness values are cached by patch identity — patches are deterministic
-(each edit carries its own seed), so identical patches are identical
-programs.
+Evaluation goes through the :mod:`repro.core.evaluator` engine: candidates
+for a generation are drawn speculatively in batches and handed to the
+evaluator as a unit, so a ``ParallelEvaluator`` overlaps variant executions
+across worker processes while the (cheap, RNG-driven) candidate generation
+stays in the parent — serial and parallel runs consume the RNG identically
+and are therefore bit-identical in ``static`` fitness mode.  Fitness values
+are cached by canonical patch hash — patches are deterministic (each edit
+carries its own seed), so identical patches are identical programs; with a
+persistent cache, repeated or resumed runs never re-measure a known variant.
+
+Long searches checkpoint each generation (population + RNG state + cache
+stats, via :mod:`repro.core.serialize`) and ``run(resume=True)`` continues a
+checkpointed search to the same result as an uninterrupted one.
 """
 
 from __future__ import annotations
 
+import json
+import os
 import time as _time
 from dataclasses import dataclass, field
 
 import numpy as np
 
 from .crossover import messy_crossover
+from .evaluator import Evaluator, FitnessCache, SerialEvaluator
 from .fitness import InvalidVariant
 from .mutation import Edit, EditError, apply_patch, random_edit
-from .nsga2 import pareto_front, rank_population, select_elites, tournament
+from .nsga2 import pareto_front, rank_select, tournament
+from .serialize import (patch_doc, patch_from_doc, rng_from_state,
+                        rng_state_doc)
 
 
 @dataclass(frozen=True)
@@ -48,10 +63,21 @@ class SearchResult:
 
 
 class GevoML:
+    """NSGA-II search over Copy/Delete patches of one workload's program.
+
+    ``evaluator`` defaults to an in-process :class:`SerialEvaluator`; pass a
+    :class:`~repro.core.evaluator.ParallelEvaluator` (or use ``cache_path``
+    for a persistent fitness store) to scale evaluation.  ``checkpoint_dir``
+    enables per-generation snapshots and ``run(resume=True)``.
+    """
+
     def __init__(self, workload, *, pop_size: int = 32, n_elite: int = 16,
                  init_mutations: int = 3, crossover_rate: float = 0.8,
                  mutation_rate: float = 0.5, max_tries: int = 40,
-                 seed: int = 0, verbose: bool = False):
+                 seed: int = 0, verbose: bool = False,
+                 evaluator: Evaluator | None = None,
+                 cache_path: str | None = None,
+                 checkpoint_dir: str | None = None):
         self.w = workload
         self.pop_size = pop_size
         self.n_elite = min(n_elite, pop_size)
@@ -61,28 +87,44 @@ class GevoML:
         self.max_tries = max_tries
         self.rng = np.random.default_rng(seed)
         self.verbose = verbose
-        self._cache: dict[tuple[Edit, ...], tuple[float, float]] = {}
-        self.n_evals = 0
-        self.n_invalid = 0
+        self._owns_evaluator = evaluator is None
+        if evaluator is None:
+            evaluator = SerialEvaluator(workload, cache=FitnessCache(cache_path))
+        elif cache_path is not None:
+            raise ValueError("pass cache_path OR a pre-built evaluator "
+                             "(give its FitnessCache the path), not both")
+        self.evaluator = evaluator
+        self.checkpoint_dir = checkpoint_dir
+        self._n_invalid_outcomes = 0
 
-    # -- evaluation -----------------------------------------------------------
-    def _fitness(self, edits: tuple[Edit, ...]) -> tuple[float, float]:
-        if edits in self._cache:
-            return self._cache[edits]
-        program = apply_patch(self.w.program, list(edits))  # may raise EditError
-        fit = self.w.evaluate(program)                       # may raise InvalidVariant
-        self._cache[edits] = fit
-        self.n_evals += 1
-        return fit
+    # -- counters (cache-aware; executions live on the evaluator) ----------
+    @property
+    def n_evals(self) -> int:
+        return self.evaluator.n_evals
 
-    def _try_individual(self, edits: list[Edit]) -> Individual | None:
-        try:
-            return Individual(tuple(edits), self._fitness(tuple(edits)))
-        except (EditError, InvalidVariant):
-            self.n_invalid += 1
-            return None
+    @property
+    def n_invalid(self) -> int:
+        return self._n_invalid_outcomes
 
-    # -- variation ------------------------------------------------------------
+    @property
+    def cache(self) -> FitnessCache:
+        return self.evaluator.cache
+
+    def close(self) -> None:
+        """Release the evaluator (worker pool, cache file handle) — only if
+        this GevoML constructed it; a caller-provided evaluator is the
+        caller's to close."""
+        if self._owns_evaluator:
+            self.evaluator.close()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+        return False
+
+    # -- candidate generation (parent process; consumes self.rng) ----------
     def _mutate_edits(self, edits: list[Edit]) -> list[Edit] | None:
         """Append one fresh random edit (sampled against the patched program,
         so uids of earlier clones are addressable)."""
@@ -100,57 +142,140 @@ class GevoML:
                 continue
         return None
 
-    def _spawn_initial(self) -> Individual:
-        for _ in range(self.max_tries):
-            edits: list[Edit] = []
-            ok = True
-            for _ in range(self.init_mutations):
-                nxt = self._mutate_edits(edits)
-                if nxt is None:
-                    ok = False
-                    break
-                edits = nxt
-            if not ok:
-                continue
-            ind = self._try_individual(edits)
-            if ind is not None:
-                return ind
-        raise RuntimeError("could not build a valid initial individual")
+    def _initial_candidate(self) -> list[Edit] | None:
+        edits: list[Edit] = []
+        for _ in range(self.init_mutations):
+            nxt = self._mutate_edits(edits)
+            if nxt is None:
+                return None
+            edits = nxt
+        return edits
 
-    def _spawn_offspring(self, pop: list[Individual], rank, crowd
-                         ) -> Individual:
+    def _offspring_candidate(self, pop: list[Individual], rank, crowd
+                             ) -> list[Edit] | None:
+        a = pop[tournament(self.rng, rank, crowd)]
+        b = pop[tournament(self.rng, rank, crowd)]
+        if self.rng.random() < self.crossover_rate:
+            child_edits, alt = messy_crossover(
+                list(a.edits), list(b.edits), self.rng)
+            if not child_edits and alt:
+                child_edits = alt
+        else:
+            child_edits = list(a.edits)
+        if self.rng.random() < self.mutation_rate or not child_edits:
+            mutated = self._mutate_edits(child_edits)
+            if mutated is None:
+                return None
+            child_edits = mutated
+        return child_edits
+
+    # -- batched fill: speculate candidates, evaluate as one dispatch ------
+    def _fill(self, n: int, candidate_fn, what: str) -> list[Individual]:
+        filled: list[Individual] = []
         for _ in range(self.max_tries):
-            a = pop[tournament(self.rng, rank, crowd)]
-            b = pop[tournament(self.rng, rank, crowd)]
-            if self.rng.random() < self.crossover_rate:
-                child_edits, alt = messy_crossover(
-                    list(a.edits), list(b.edits), self.rng)
-                if not child_edits and alt:
-                    child_edits = alt
-            else:
-                child_edits = list(a.edits)
-            if self.rng.random() < self.mutation_rate or not child_edits:
-                mutated = self._mutate_edits(child_edits)
-                if mutated is None:
-                    continue
-                child_edits = mutated
-            ind = self._try_individual(child_edits)
-            if ind is not None:
-                return ind
-        raise RuntimeError("could not build a valid offspring")
+            if len(filled) >= n:
+                break
+            batch = []
+            for _ in range(n - len(filled)):
+                c = candidate_fn()
+                if c is not None:
+                    batch.append(tuple(c))
+            if not batch:
+                continue
+            for edits, out in zip(batch, self.evaluator.evaluate_batch(batch)):
+                if out.ok:
+                    filled.append(Individual(edits, out.fitness))
+                else:
+                    self._n_invalid_outcomes += 1
+        if len(filled) < n:
+            raise RuntimeError(f"could not build {n} valid {what} "
+                               f"in {self.max_tries} rounds")
+        return filled
+
+    # -- checkpoint/resume --------------------------------------------------
+    def _checkpoint_path(self, name: str) -> str:
+        return os.path.join(self.checkpoint_dir, name)
+
+    def _save_checkpoint(self, gen: int, original, pop: list[Individual],
+                         history: list[dict]) -> None:
+        os.makedirs(self.checkpoint_dir, exist_ok=True)
+        doc = {
+            "gen": gen,
+            "program_fingerprint": self.evaluator.fingerprint,
+            "original_fitness": list(original),
+            "population": [{"edits": patch_doc(i.edits),
+                            "fitness": list(i.fitness)} for i in pop],
+            "rng_state": rng_state_doc(self.rng),
+            "history": history,
+            "counters": {"n_invalid": self._n_invalid_outcomes,
+                         "evaluator": self.evaluator.stats()},
+        }
+        blob = json.dumps(doc)
+        path = self._checkpoint_path(f"gen_{gen:04d}.json")
+        tmp = path + ".tmp"
+        with open(tmp, "w") as f:
+            f.write(blob)
+        os.replace(tmp, path)
+        latest = self._checkpoint_path("latest.json")
+        with open(latest + ".tmp", "w") as f:
+            f.write(blob)
+        os.replace(latest + ".tmp", latest)
+
+    def _load_checkpoint(self) -> dict | None:
+        path = self._checkpoint_path("latest.json")
+        if not os.path.exists(path):
+            return None
+        doc = json.load(open(path))
+        if doc["program_fingerprint"] != self.evaluator.fingerprint:
+            raise ValueError(
+                "checkpoint was written for a different program "
+                f"(fingerprint {doc['program_fingerprint'][:12]}… != "
+                f"{self.evaluator.fingerprint[:12]}…)")
+        return doc
 
     # -- main loop ------------------------------------------------------------
-    def run(self, generations: int = 10) -> SearchResult:
-        t0 = _time.perf_counter()
-        original = self.w.evaluate(self.w.program)
-        pop = [self._spawn_initial() for _ in range(self.pop_size)]
-        history = []
-        for gen in range(generations):
+    def run(self, generations: int = 10, *, resume: bool = False
+            ) -> SearchResult:
+        state = (self._load_checkpoint()
+                 if resume and self.checkpoint_dir else None)
+        if state is not None:
+            original = tuple(state["original_fitness"])
+            pop = [Individual(patch_from_doc(p["edits"]), tuple(p["fitness"]))
+                   for p in state["population"]]
+            history = list(state["history"])
+            self.rng = rng_from_state(state["rng_state"])
+            self._n_invalid_outcomes = state["counters"]["n_invalid"]
+            # restore cumulative counters to their snapshot values so
+            # post-resume history rows continue the uninterrupted series
+            # (assignment, not +=: the same instance may be resuming)
+            ev_stats = state["counters"]["evaluator"]
+            self.evaluator.n_evals = ev_stats["n_evals"]
+            self.evaluator.n_invalid = ev_stats["n_invalid"]
+            self.evaluator.cache.hits = ev_stats["hits"]
+            self.evaluator.cache.misses = ev_stats["misses"]
+            start_gen = state["gen"] + 1
+            t0 = _time.perf_counter() - (history[-1]["wall_s"]
+                                         if history else 0.0)
+        else:
+            t0 = _time.perf_counter()
+            first = self.evaluator.evaluate_one(())
+            if not first.ok:
+                raise InvalidVariant(
+                    f"original program failed evaluation: {first.error}")
+            original = first.fitness
+            pop = self._fill(self.pop_size, self._initial_candidate,
+                             "initial individuals")
+            history = []
+            start_gen = 0
+
+        for gen in range(start_gen, generations):
             objs = np.array([i.fitness for i in pop])
-            rank, crowd = rank_population(objs)
-            elites = [pop[i] for i in select_elites(objs, self.n_elite)]
-            offspring = [self._spawn_offspring(pop, rank, crowd)
-                         for _ in range(self.pop_size - len(elites))]
+            rank, crowd, elite_idx = rank_select(objs, self.n_elite)
+            elites = [pop[i] for i in elite_idx]
+            offspring = self._fill(
+                self.pop_size - len(elites),
+                lambda: self._offspring_candidate(pop, rank, crowd),
+                "offspring")
             pop = elites + offspring
             objs = np.array([i.fitness for i in pop])
             pf = pareto_front(objs)
@@ -161,13 +286,18 @@ class GevoML:
                 "pareto_size": len(pf),
                 "evals": self.n_evals,
                 "invalid": self.n_invalid,
+                "cache_hits": self.cache.hits,
+                "cache_hit_rate": round(self.cache.hit_rate, 4),
                 "wall_s": _time.perf_counter() - t0,
             })
             if self.verbose:
                 h = history[-1]
                 print(f"[gen {gen:3d}] time={h['best_time']:.3e} "
                       f"err={h['best_error']:.4f} pareto={h['pareto_size']} "
-                      f"evals={h['evals']} invalid={h['invalid']}")
+                      f"evals={h['evals']} invalid={h['invalid']} "
+                      f"cache_hit={h['cache_hit_rate']:.0%}")
+            if self.checkpoint_dir:
+                self._save_checkpoint(gen, original, pop, history)
         objs = np.array([i.fitness for i in pop])
         pf = [pop[i] for i in pareto_front(objs)]
         # de-duplicate pareto members by fitness

@@ -1,14 +1,23 @@
-"""Persistence for GEVO-ML artifacts: IR programs and patch genomes.
+"""Persistence for GEVO-ML artifacts: IR programs, patch genomes, and the
+canonical forms the evaluation engine hashes.
 
 A production deployment needs to ship the winning variant: searches run for
 days and their outputs (the Pareto front of patches + the original program)
 must survive restarts and be re-appliable elsewhere.  Programs serialize to
 JSON with constants in an npz sidecar (weights are large); patches are pure
 JSON (they carry their own RNG seeds, so re-application is deterministic).
+
+This module also defines the **canonical form** used by the persistent
+fitness cache (`core/evaluator.py`): a patch applied to a program is fully
+determined by (program structure + constants, edit list), so
+``patch_key(fingerprint, edits)`` is a content address for the variant's
+fitness.  Search checkpoints (`core/search.py`) reuse the same edit docs plus
+a JSON-able NumPy ``Generator`` state.
 """
 
 from __future__ import annotations
 
+import hashlib
 import json
 import os
 
@@ -17,9 +26,15 @@ import numpy as np
 from .ir import Operation, Program, TensorType
 from .mutation import Edit
 
+# --------------------------------------------------------------------------
+# Canonical program / patch documents
+# --------------------------------------------------------------------------
 
-def save_program(program: Program, path: str) -> None:
-    """Write <path>.json (structure) + <path>.npz (constant payloads)."""
+
+def program_doc(program: Program) -> tuple[dict, dict[str, np.ndarray]]:
+    """The program as a JSON-able doc + ndarray constants keyed for an npz
+    sidecar.  This is the canonical serialized form: ``save_program`` writes
+    it and ``program_fingerprint`` hashes it."""
     consts: dict[str, np.ndarray] = {}
     ops = []
     for i, op in enumerate(program.ops):
@@ -44,6 +59,92 @@ def save_program(program: Program, path: str) -> None:
         "next_value": program._next_value,
         "next_uid": program._next_uid,
     }
+    return doc, consts
+
+
+def _canon(v):
+    """JSON-able canonical value: tuples -> lists, numpy scalars -> python."""
+    if isinstance(v, dict):
+        return {k: _canon(x) for k, x in v.items()}
+    if isinstance(v, (tuple, list)):
+        return [_canon(x) for x in v]
+    if isinstance(v, np.generic):
+        return v.item()
+    return v
+
+
+def program_fingerprint(program: Program) -> str:
+    """Content hash of a program (structure + constant payloads).
+
+    Identical programs — including identical baked-in weights — hash the
+    same across processes and across save/load round-trips, so fitness cache
+    entries keyed on it are shareable between runs."""
+    doc, consts = program_doc(program)
+    h = hashlib.sha256()
+    h.update(json.dumps(_canon(doc), sort_keys=True,
+                        separators=(",", ":")).encode())
+    for k in sorted(consts):
+        a = np.ascontiguousarray(consts[k])
+        h.update(k.encode())
+        h.update(str(a.dtype).encode())
+        h.update(str(a.shape).encode())
+        h.update(a.tobytes())
+    return h.hexdigest()
+
+
+def edit_doc(e: Edit) -> dict:
+    return {"kind": e.kind, "target_uid": e.target_uid,
+            "dest_uid": e.dest_uid, "seed": e.seed}
+
+
+def edit_from_doc(d: dict) -> Edit:
+    return Edit(kind=d["kind"], target_uid=d["target_uid"],
+                dest_uid=d["dest_uid"], seed=d["seed"])
+
+
+def patch_doc(edits) -> list[dict]:
+    return [edit_doc(e) for e in edits]
+
+
+def patch_from_doc(docs) -> tuple[Edit, ...]:
+    return tuple(edit_from_doc(d) for d in docs)
+
+
+def patch_key(fingerprint: str, edits) -> str:
+    """Content address of (program, patch): the persistent fitness cache key.
+
+    Patches are deterministic (each edit carries its own repair seed), so the
+    key fully identifies the variant program — and therefore its ``static``
+    fitness — across processes, runs, and machines."""
+    blob = json.dumps({"program": fingerprint, "edits": patch_doc(edits)},
+                      sort_keys=True, separators=(",", ":"))
+    return hashlib.sha256(blob.encode()).hexdigest()
+
+
+# --------------------------------------------------------------------------
+# RNG state (for search checkpoint/resume)
+# --------------------------------------------------------------------------
+
+
+def rng_state_doc(rng: np.random.Generator) -> dict:
+    """JSON-able snapshot of a NumPy Generator's bit-generator state."""
+    return json.loads(json.dumps(rng.bit_generator.state))
+
+
+def rng_from_state(state: dict) -> np.random.Generator:
+    bg = getattr(np.random, state["bit_generator"])()
+    bg.state = state
+    return np.random.Generator(bg)
+
+
+# --------------------------------------------------------------------------
+# Programs
+# --------------------------------------------------------------------------
+
+
+def save_program(program: Program, path: str) -> None:
+    """Write <path>.json (structure) + <path>.npz (constant payloads)."""
+    doc, consts = program_doc(program)
     with open(path + ".json", "w") as f:
         json.dump(doc, f)
     np.savez(path + ".npz", **consts)
@@ -81,11 +182,14 @@ def load_program(path: str) -> Program:
     return prog
 
 
+# --------------------------------------------------------------------------
+# Patches
+# --------------------------------------------------------------------------
+
+
 def save_patches(patches: list[tuple[Edit, ...]], path: str,
                  fitnesses: list[tuple] | None = None) -> None:
-    doc = [{"edits": [{"kind": e.kind, "target_uid": e.target_uid,
-                       "dest_uid": e.dest_uid, "seed": e.seed}
-                      for e in patch],
+    doc = [{"edits": patch_doc(patch),
             "fitness": list(fitnesses[i]) if fitnesses else None}
            for i, patch in enumerate(patches)]
     with open(path, "w") as f:
@@ -94,6 +198,4 @@ def save_patches(patches: list[tuple[Edit, ...]], path: str,
 
 def load_patches(path: str) -> list[tuple[Edit, ...]]:
     doc = json.load(open(path))
-    return [tuple(Edit(kind=e["kind"], target_uid=e["target_uid"],
-                       dest_uid=e["dest_uid"], seed=e["seed"])
-                  for e in p["edits"]) for p in doc]
+    return [patch_from_doc(p["edits"]) for p in doc]

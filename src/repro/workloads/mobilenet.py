@@ -183,6 +183,8 @@ def build_mobilenet_prediction_workload(*, alpha: float = 0.25,
                                         seed: int = 0,
                                         verbose: bool = False
                                         ) -> PredictionWorkload:
+    from ..core.evaluator import WorkloadSpec
+
     xtr, ytr, _, _ = synthetic_cifar10()
     params = init_mobilenet(alpha=alpha, seed=seed)
     params = pretrain(params, xtr[:n_pretrain], ytr[:n_pretrain],
@@ -192,4 +194,11 @@ def build_mobilenet_prediction_workload(*, alpha: float = 0.25,
         name="MobileNet-prediction",
         program=program,
         images=xtr[:n_eval], labels=ytr[:n_eval],
-        batch=batch, time_mode=time_mode)
+        batch=batch, time_mode=time_mode,
+        # this workload pickles whole (weights are baked-in constants), so
+        # workers normally receive it directly; the spec is a fallback that
+        # would re-pretrain — identical weights, but slower worker startup
+        spec=WorkloadSpec.make(
+            "repro.workloads.mobilenet:build_mobilenet_prediction_workload",
+            alpha=alpha, batch=batch, n_eval=n_eval, n_pretrain=n_pretrain,
+            pretrain_epochs=pretrain_epochs, time_mode=time_mode, seed=seed))

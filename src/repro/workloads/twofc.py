@@ -106,6 +106,8 @@ def build_twofc_training_workload(*, batch: int = 32, hidden: int = 128,
                                   n_train: int = 4096, n_test: int = 2000,
                                   time_mode: str = "static",
                                   seed: int = 0) -> TrainingWorkload:
+    from ..core.evaluator import WorkloadSpec
+
     xtr, ytr, xte, yte = synthetic_mnist(n_train, n_test)
     program = build_twofc_step(batch=batch, hidden=hidden, lr=lr)
     return TrainingWorkload(
@@ -115,4 +117,10 @@ def build_twofc_training_workload(*, batch: int = 32, hidden: int = 128,
         init_weights=init_twofc_weights(hidden=hidden, seed=seed),
         train_x=xtr, train_y=ytr,
         eval_fn=make_eval_fn(xte, yte),
-        batch=batch, steps=steps, time_mode=time_mode)
+        batch=batch, steps=steps, time_mode=time_mode,
+        # eval_fn closes over jitted state and cannot pickle; parallel
+        # workers rebuild the (deterministic) workload from this recipe
+        spec=WorkloadSpec.make(
+            "repro.workloads.twofc:build_twofc_training_workload",
+            batch=batch, hidden=hidden, steps=steps, lr=lr,
+            n_train=n_train, n_test=n_test, time_mode=time_mode, seed=seed))

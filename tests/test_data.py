@@ -2,6 +2,11 @@
 learnability structure."""
 
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis",
+                    reason="property tests need hypothesis (pip install "
+                           ".[test])")
 from hypothesis import given, settings, strategies as st
 
 from repro.data.tokens import TokenPipeline

@@ -3,6 +3,10 @@ crossover validity rate (paper reports ~80%)."""
 
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis",
+                    reason="property tests need hypothesis (pip install "
+                           ".[test])")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.builder import Builder

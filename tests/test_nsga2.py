@@ -1,6 +1,11 @@
 """NSGA-II machinery: domination, fronts, crowding, selection invariants."""
 
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis",
+                    reason="property tests need hypothesis (pip install "
+                           ".[test])")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.nsga2 import (crowding_distance, dominates,

@@ -72,5 +72,5 @@ def test_fitness_cache_hits(tiny_workload):
     s = GevoML(tiny_workload, pop_size=4, n_elite=2, seed=1,
                init_mutations=1)
     s.run(generations=2)
-    assert len(s._cache) <= s.n_evals + 1
+    assert len(s.cache) == s.n_evals  # every execution is recorded once
     assert s.n_evals < 4 * 3 * 3  # caching keeps evals bounded
