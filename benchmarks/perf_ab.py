@@ -1,6 +1,6 @@
 """§Perf A/B measurements.
 
-Two suites (select with ``--suite {cells,evaluator,all}``):
+Three suites (select with ``--suite {cells,evaluator,operators,all}``):
 
 * ``cells`` (default) — for each hillclimbed model cell, measures (under the
   FINAL roofline analyzer, so numbers are comparable) the paper-faithful
@@ -14,8 +14,16 @@ Two suites (select with ``--suite {cells,evaluator,all}``):
   wall time, evaluation counts, and cache hit rates, writing
   experiments/perf/evaluator_ab.json.
 
+* ``operators`` — A/Bs the edit-operator mix on the 2fcNet search: the
+  legacy ``{copy, delete}`` pair vs. the full five-operator registry
+  (``swap``/``insert``/``const_perturb`` added), same seed and budget;
+  reports valid-candidate rate, evals/sec, final Pareto hypervolume, and the
+  per-operator proposed/valid/elite counters, writing
+  experiments/perf/operators_ab.json (results quoted in EXPERIMENTS.md).
+
   PYTHONPATH=src python -m benchmarks.perf_ab
   PYTHONPATH=src python -m benchmarks.perf_ab --suite evaluator --workers 2
+  PYTHONPATH=src python -m benchmarks.perf_ab --suite operators
 """
 
 from __future__ import annotations
@@ -122,6 +130,75 @@ def evaluator_ab(workers: int = 2, generations: int = 4) -> dict:
     return out
 
 
+def operators_ab(generations: int = 6) -> dict:
+    """Legacy {copy,delete} vs. full five-operator mix on the 2fcNet search.
+
+    Same seed, same budget, ``static`` fitness: the A/B isolates the operator
+    mix.  Pareto quality is compared by 2-D hypervolume against a reference
+    point slightly worse than the original program's fitness."""
+    from repro.core.edits import OperatorWeights
+    from repro.core.evaluator import SerialEvaluator
+    from repro.core.nsga2 import hypervolume_2d
+    from repro.core.search import GevoML
+    from repro.workloads.twofc import build_twofc_training_workload
+
+    w = build_twofc_training_workload(batch=32, hidden=64, steps=60,
+                                      n_train=2048, n_test=1024)
+    to, eo = w.evaluate(w.program)
+    ref = (to * 1.05, eo + 0.05)
+
+    def measure(tag, weights):
+        ev = SerialEvaluator(w)
+        s = GevoML(w, pop_size=12, n_elite=6, seed=0, operators=weights,
+                   evaluator=ev)
+        t0 = time.perf_counter()
+        res = s.run(generations=generations)
+        wall = time.perf_counter() - t0
+        outcomes = ev.n_evals  # executed variants (cache-missing candidates)
+        # candidate validity = mutation proposals that applied cleanly
+        # (apply failures are resampled parent-side and never reach the
+        # evaluator, so evaluator-level invalids can't measure the mix)
+        per_op = res.operator_stats()
+        proposed = sum(r["proposed"] for r in per_op.values())
+        applied = sum(r["applied"] for r in per_op.values())
+        valid_rate = applied / max(proposed, 1)
+        hv = hypervolume_2d([i.fitness for i in res.pareto], ref)
+        rec = {"operators": list(weights.names()),
+               "wall_s": round(wall, 4),
+               "n_evals": outcomes,
+               "evals_per_s": round(outcomes / max(wall, 1e-9), 2),
+               "valid_candidate_rate": round(valid_rate, 4),
+               "exec_invalid": ev.n_invalid,
+               "pareto": [list(i.fitness) for i in res.pareto],
+               "hypervolume": hv,
+               "best_error": min(i.fitness[1] for i in res.pareto),
+               "best_time": min(i.fitness[0] for i in res.pareto),
+               "per_operator": per_op}
+        ev.close()
+        print(f"[operators_ab] {tag}: valid={valid_rate:.0%} "
+              f"evals/s={rec['evals_per_s']} hv={hv:.3e} "
+              f"best_err={rec['best_error']:.4f}")
+        return rec
+
+    out = {
+        "generations": generations,
+        "original_fitness": [to, eo],
+        "hv_reference": list(ref),
+        "legacy": measure("legacy {copy,delete}", OperatorWeights.legacy()),
+        "full": measure("full five-operator mix",
+                        OperatorWeights.all_registered()),
+    }
+    out["hv_ratio_full_vs_legacy"] = round(
+        out["full"]["hypervolume"] / max(out["legacy"]["hypervolume"], 1e-30),
+        3)
+    os.makedirs(OUT, exist_ok=True)
+    path = os.path.join(OUT, "operators_ab.json")
+    json.dump(out, open(path, "w"), indent=1)
+    print(f"[operators_ab] wrote {path}; hypervolume full/legacy="
+          f"{out['hv_ratio_full_vs_legacy']}x")
+    return out
+
+
 def run_cells():
     os.makedirs(OUT, exist_ok=True)
 
@@ -172,7 +249,8 @@ def run_cells():
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--suite", choices=("cells", "evaluator", "all"),
+    ap.add_argument("--suite",
+                    choices=("cells", "evaluator", "operators", "all"),
                     default="cells")
     ap.add_argument("--workers", type=int, default=2,
                     help="ParallelEvaluator workers for --suite evaluator")
@@ -182,6 +260,8 @@ def main():
         run_cells()
     if args.suite in ("evaluator", "all"):
         evaluator_ab(workers=args.workers, generations=args.generations)
+    if args.suite in ("operators", "all"):
+        operators_ab(generations=max(args.generations, 6))
 
 
 if __name__ == "__main__":

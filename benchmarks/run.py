@@ -11,8 +11,10 @@ Prints ``name,us_per_call,derived`` CSV rows (derived carries the
 benchmark-specific headline number).  ``--full`` raises search budgets
 toward the paper's scale.  ``--parallel N`` runs the search benches through
 an N-worker ParallelEvaluator; ``--cache-dir D`` gives them a persistent
-fitness cache (rerun to see hit rates climb).  Serial-vs-parallel A/B
-timing lives in ``benchmarks/perf_ab.py --suite evaluator``.
+fitness cache (rerun to see hit rates climb); ``--operators SPEC`` picks the
+edit-operator mix ("all", "legacy", or "name=w,...").  Serial-vs-parallel
+and legacy-vs-five-operator A/B timing live in ``benchmarks/perf_ab.py``
+(``--suite evaluator`` / ``--suite operators``).
 """
 
 from __future__ import annotations
@@ -33,8 +35,9 @@ def _row(name: str, us: float, derived: str) -> None:
     print(f"{name},{us:.1f},{derived}")
 
 
-# Evaluation-engine options for the search benches (set in main()).
-OPTS = {"parallel": 0, "cache_dir": None}
+# Evaluation-engine / edit-layer options for the search benches
+# (set in main()).
+OPTS = {"parallel": 0, "cache_dir": None, "operators": "all"}
 
 
 def _make_evaluator(workload, tag: str):
@@ -44,6 +47,12 @@ def _make_evaluator(workload, tag: str):
                   if OPTS["cache_dir"] else None)
     return make_evaluator(workload, parallel=OPTS["parallel"],
                           cache_path=cache_path)
+
+
+def _operator_weights():
+    from repro.core.edits import OperatorWeights
+
+    return OperatorWeights.parse(OPTS["operators"])
 
 
 # ---------------------------------------------------------------------------
@@ -57,7 +66,8 @@ def bench_2fcnet(full: bool) -> None:
                                       n_train=4096, n_test=2000, lr=0.01)
     t0 = time.perf_counter()
     s = GevoML(w, pop_size=16 if full else 12, n_elite=8 if full else 6,
-               seed=0, evaluator=_make_evaluator(w, "fig4b_2fcnet"))
+               seed=0, operators=_operator_weights(),
+               evaluator=_make_evaluator(w, "fig4b_2fcnet"))
     res = s.run(generations=8 if full else 5)
     wall = time.perf_counter() - t0
     s.evaluator.close()
@@ -87,7 +97,8 @@ def bench_mobilenet(full: bool) -> None:
         pretrain_epochs=4 if full else 2)
     t0 = time.perf_counter()
     s = GevoML(w, pop_size=12 if full else 10, n_elite=6 if full else 5,
-               seed=0, evaluator=_make_evaluator(w, "fig4a_mobilenet"))
+               seed=0, operators=_operator_weights(),
+               evaluator=_make_evaluator(w, "fig4a_mobilenet"))
     res = s.run(generations=6 if full else 4)
     wall = time.perf_counter() - t0
     s.evaluator.close()
@@ -145,7 +156,9 @@ def bench_crossover(full: bool) -> None:
 
 
 def bench_mutation_analysis(full: bool) -> None:
-    from repro.core.search import GevoML, describe_patch
+    from repro.core.edits import minimize_patch
+    from repro.core.evaluator import SerialEvaluator
+    from repro.core.search import GevoML
     from repro.workloads.twofc import build_twofc_training_workload
 
     w = build_twofc_training_workload(batch=32, hidden=32, steps=80,
@@ -153,16 +166,23 @@ def bench_mutation_analysis(full: bool) -> None:
     t0, e0 = w.evaluate(w.program)
     # mutation analysis is about the best-found individual; sweep a few
     # seeds (searches are seconds at this scale) and analyze the winner
-    best = None
+    best, best_ev = None, None
     for seed in (0, 1, 2):
-        s = GevoML(w, pop_size=10, n_elite=5, seed=seed)
+        ev = SerialEvaluator(w)
+        s = GevoML(w, pop_size=10, n_elite=5, seed=seed,
+                   operators=_operator_weights(), evaluator=ev)
         res = s.run(generations=4)
         cand = res.best_by_error()
         if best is None or cand.fitness[1] < best.fitness[1]:
-            best = cand
+            best, best_ev = cand, ev
+    # GEVO-style key-mutation isolation: ddmin against the winner's warm
+    # fitness cache, so minimization re-measures only unseen sub-patches
+    key_patch, _ = minimize_patch(best.patch, best_ev,
+                                  expect_fitness=best.fitness)
     _row("sec62_best_training_patch", 0.0,
          f"orig_err={e0:.4f} best_err={best.fitness[1]:.4f} "
-         f"edits=[{describe_patch(best.edits)}]")
+         f"edits=[{best.patch.describe()}] "
+         f"key_mutations=[{key_patch.describe()}]")
 
 
 def bench_kernels(full: bool) -> None:
@@ -243,9 +263,13 @@ def main() -> None:
                          "(0/1 = serial)")
     ap.add_argument("--cache-dir", default=None,
                     help="directory for persistent fitness caches")
+    ap.add_argument("--operators", default="all",
+                    help='edit-operator mix for the search benches: "all", '
+                         '"legacy", or "name=w,name=w,..."')
     args, _ = ap.parse_known_args()
     OPTS["parallel"] = args.parallel
     OPTS["cache_dir"] = args.cache_dir
+    OPTS["operators"] = args.operators
     if args.cache_dir:
         os.makedirs(args.cache_dir, exist_ok=True)
     print("name,us_per_call,derived")

@@ -1,6 +1,7 @@
 """The paper's prediction experiment: GEVO-ML on MobileNet/CIFAR10-syn
 (Figure 4a).  Pretrains MobileNet in JAX, bakes it into the IR with weights
-as constants, then evolves Copy/Delete patches minimizing
+as constants, then evolves registry-operator patches (``--operators``
+selects the mix; default all five) minimizing
 (inference time, prediction error).
 
     PYTHONPATH=src python examples/gevo_mobilenet.py [--full]
@@ -17,8 +18,8 @@ import time
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
+from repro.core import GevoML, OperatorWeights
 from repro.core.evaluator import make_evaluator
-from repro.core.search import GevoML, describe_patch
 from repro.workloads.mobilenet import build_mobilenet_prediction_workload
 
 
@@ -26,6 +27,9 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true",
                     help="larger model / eval set / budget (slow)")
+    ap.add_argument("--operators", default="all",
+                    help='mutation mix: "all", "legacy", or '
+                         '"name=w,name=w,..."')
     ap.add_argument("--parallel", type=int, default=0,
                     help="evaluation worker processes (0/1 = in-process); "
                          "the pretrained workload ships to workers whole")
@@ -48,6 +52,7 @@ def main():
                                cache_path=args.cache)
     s = GevoML(w, pop_size=12 if args.full else 8,
                n_elite=6 if args.full else 4, seed=0, verbose=True,
+               operators=OperatorWeights.parse(args.operators),
                evaluator=evaluator)
     res = s.run(generations=6 if args.full else 3)
     evaluator.close()
@@ -58,7 +63,7 @@ def main():
         t, e = ind.fitness
         print(f"  time={t:.3e} ({(1-t/t0_)*100:+5.1f}%)  err={e:.4f} "
               f"({(e-e0)*100:+.2f}pp)")
-        print(f"    {describe_patch(ind.edits)}")
+        print(f"    {ind.patch.describe()}")
     ok = [i for i in res.pareto if i.fitness[1] <= e0 + 0.02]
     if ok:
         fastest = min(ok, key=lambda i: i.fitness[0])

@@ -1,10 +1,18 @@
 """Quickstart: GEVO-ML in miniature (~2 minutes on CPU).
 
 Reproduces the paper's training experiment structure on 2fcNet/MNIST-syn:
-NSGA-II evolves Copy/Delete patches of the training-step IR, and the Pareto
-front trades runtime against model error.  Run:
+NSGA-II evolves patches of the training-step IR — sampled from the pluggable
+operator registry (delete / copy / swap / insert / const_perturb) — and the
+Pareto front trades runtime against model error.  Run:
 
     PYTHONPATH=src python examples/quickstart.py
+
+Edit-layer flags (see README "Operator registry"):
+
+    --operators SPEC    sampling mix: "all" (default), "legacy"
+                        (paper's copy/delete), or "copy=1,swap=2,..."
+    --minimize          ddmin the best-by-time patch down to its key
+                        mutations (nearly free: reuses the fitness cache)
 
 Evaluation-engine flags (see README "Evaluation engine"):
 
@@ -21,13 +29,20 @@ import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
+from repro.core import GevoML, OperatorWeights, minimize_patch
 from repro.core.evaluator import make_evaluator
-from repro.core.search import GevoML, describe_patch
 from repro.workloads.twofc import build_twofc_training_workload
 
 
 def main():
     ap = argparse.ArgumentParser()
+    ap.add_argument("--operators", default="all",
+                    help='mutation mix: "all", "legacy", or '
+                         '"name=w,name=w,..." over '
+                         "{delete,copy,swap,insert,const_perturb}")
+    ap.add_argument("--minimize", action="store_true",
+                    help="minimize the best-by-time patch to its key "
+                         "mutations (GEVO Sec. 6 style)")
     ap.add_argument("--parallel", type=int, default=0,
                     help="evaluation worker processes (0/1 = in-process)")
     ap.add_argument("--cache", default=None,
@@ -40,6 +55,7 @@ def main():
     args = ap.parse_args()
     if args.resume and not args.checkpoint:
         ap.error("--resume requires --checkpoint")
+    weights = OperatorWeights.parse(args.operators)
 
     print("Building 2fcNet training workload (one SGD step as IR)...")
     w = build_twofc_training_workload(batch=32, hidden=64, steps=80,
@@ -51,11 +67,13 @@ def main():
 
     mode = (f"{args.parallel} workers" if args.parallel > 1 else "serial")
     print(f"Running GEVO-ML (NSGA-II, pop=12, {args.generations} "
-          f"generations, {mode} evaluation)...")
+          f"generations, operators={{{', '.join(weights.names())}}}, "
+          f"{mode} evaluation)...")
     evaluator = make_evaluator(w, parallel=args.parallel,
                                cache_path=args.cache)
     search = GevoML(w, pop_size=12, n_elite=6, seed=0, verbose=True,
-                    evaluator=evaluator, checkpoint_dir=args.checkpoint)
+                    operators=weights, evaluator=evaluator,
+                    checkpoint_dir=args.checkpoint)
     res = search.run(generations=args.generations, resume=args.resume)
 
     print("\nPareto front (argmin(time, error)):")
@@ -67,12 +85,23 @@ def main():
         if e < e0 - 1e-4:
             marks.append(f"error -{(e0-e)*100:.2f}pp")
         print(f"  time={t:.3e}  err={e:.4f}  {' '.join(marks)}")
-        print(f"    patch: {describe_patch(ind.edits)}")
+        print(f"    patch: {ind.patch.describe()}")
     be = res.best_by_error()
     print(f"\nbest error {be.fitness[1]:.4f} vs original {e0:.4f} "
           f"({search.n_evals} fitness evaluations, "
           f"{search.n_invalid} invalid variants resampled, "
           f"cache hit rate {search.cache.hit_rate:.0%})")
+    print("per-operator proposed/applied/valid/elite:")
+    for name, row in res.operator_stats().items():
+        print(f"  {name:>14}: {row['proposed']:4d} / {row['applied']:4d} / "
+              f"{row['valid']:4d} / {row['elite']:4d}")
+    if args.minimize:
+        bt = res.best_by_time()
+        small, fit = minimize_patch(bt.patch, search.evaluator,
+                                    expect_fitness=bt.fitness)
+        print(f"\nminimized best-by-time patch: {len(bt.patch)} -> "
+              f"{len(small)} edits at identical fitness {fit}")
+        print(f"  key mutations: {small.describe()}")
     if args.cache:
         print(f"fitness cache: {len(search.cache)} entries at {args.cache}")
     evaluator.close()

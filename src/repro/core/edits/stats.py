@@ -1,0 +1,66 @@
+"""Per-operator search statistics: proposed / valid / elite-survival.
+
+The GEVO papers analyze *which* mutations matter (Sec. 6 mutation analysis);
+these counters make that analysis a free by-product of every run.  The
+search loop increments them and snapshots them into each
+``SearchResult.history`` row and each checkpoint:
+
+* ``proposed`` — edits of this kind sampled by the mutation step (whether or
+  not they later applied cleanly);
+* ``applied``  — proposals that applied cleanly to their candidate patch
+  (``applied / proposed`` is the operator's apply-validity rate);
+* ``valid``    — edits of this kind contained in individuals that evaluated
+  successfully;
+* ``elite``    — edits of this kind contained in elite individuals, summed
+  over generations (survival: an edit kept across generations re-counts).
+"""
+
+from __future__ import annotations
+
+from typing import Iterable
+
+from .base import registered_ops
+
+_FIELDS = ("proposed", "applied", "valid", "elite")
+
+
+class OperatorStats:
+    def __init__(self, names: Iterable[str] | None = None):
+        names = registered_ops() if names is None else names
+        self._c: dict[str, dict[str, int]] = {
+            n: dict.fromkeys(_FIELDS, 0) for n in names}
+
+    def _row(self, kind: str) -> dict[str, int]:
+        # unseen kinds (late-registered operators) get rows on first touch
+        return self._c.setdefault(kind, dict.fromkeys(_FIELDS, 0))
+
+    def count_proposed(self, kind: str) -> None:
+        self._row(kind)["proposed"] += 1
+
+    def count_applied(self, kind: str) -> None:
+        self._row(kind)["applied"] += 1
+
+    def count_valid(self, kinds: Iterable[str]) -> None:
+        for k in kinds:
+            self._row(k)["valid"] += 1
+
+    def count_elite(self, kinds: Iterable[str]) -> None:
+        for k in kinds:
+            self._row(k)["elite"] += 1
+
+    def snapshot(self) -> dict[str, dict[str, int]]:
+        """Sorted deep copy, safe to embed in history rows / checkpoints."""
+        return {n: dict(row) for n, row in sorted(self._c.items())}
+
+    to_doc = snapshot
+
+    @staticmethod
+    def from_doc(doc: dict | None) -> "OperatorStats":
+        # restore exactly the checkpointed operator set, so a resumed run's
+        # history rows match an uninterrupted run under pinned weights
+        s = OperatorStats(names=())
+        for n, row in (doc or {}).items():
+            r = s._row(n)
+            for f in _FIELDS:
+                r[f] = int(row.get(f, 0))
+        return s

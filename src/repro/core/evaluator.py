@@ -41,8 +41,8 @@ import os
 import pickle
 from dataclasses import dataclass, replace
 
+from .edits import EditError, Patch
 from .fitness import InvalidVariant
-from .mutation import Edit, EditError, apply_patch
 from .serialize import patch_key, program_fingerprint
 
 # --------------------------------------------------------------------------
@@ -208,15 +208,17 @@ def _worker_init(payload: dict) -> None:
     """Pool initializer: materialize the workload once per worker.  Runs in a
     freshly spawned interpreter, so this worker owns its JAX context."""
     global _WORKER_WORKLOAD
+    for mod in payload.get("edit_modules", ()):
+        importlib.import_module(mod)  # re-register custom edit operators
     if payload.get("pickled") is not None:
         _WORKER_WORKLOAD = pickle.loads(payload["pickled"])
     else:
         _WORKER_WORKLOAD = payload["spec"].build()
 
 
-def _worker_eval(edits: tuple[Edit, ...]):
+def _worker_eval(patch: Patch):
     try:
-        program = apply_patch(_WORKER_WORKLOAD.program, list(edits))
+        program = patch.apply(_WORKER_WORKLOAD.program)
         return ("ok", _WORKER_WORKLOAD.evaluate(program))
     except (EditError, InvalidVariant) as e:
         return ("invalid", str(e))
@@ -241,11 +243,11 @@ class Evaluator:
         self.n_evals = 0    # actual executions (cache misses evaluated)
         self.n_invalid = 0  # executions that came back invalid
 
-    def key(self, edits) -> str:
-        return patch_key(self.fingerprint, tuple(edits))
+    def key(self, patch) -> str:
+        return patch_key(self.fingerprint, patch)
 
     def evaluate_batch(self, patches) -> list[EvalOutcome]:
-        patches = [tuple(p) for p in patches]
+        patches = [Patch.coerce(p) for p in patches]
         outcomes: list[EvalOutcome | None] = [None] * len(patches)
         fresh: dict[str, list[int]] = {}   # key -> positions, insertion order
         for i, p in enumerate(patches):
@@ -270,17 +272,17 @@ class Evaluator:
                     outcomes[i] = out
         return outcomes  # type: ignore[return-value]
 
-    def evaluate_one(self, edits) -> EvalOutcome:
-        return self.evaluate_batch([edits])[0]
+    def evaluate_one(self, patch) -> EvalOutcome:
+        return self.evaluate_batch([patch])[0]
 
     def _evaluate_misses(self, patches) -> list[EvalOutcome]:
         raise NotImplementedError
 
     def _evaluate_inline(self, patches) -> list[EvalOutcome]:
         out = []
-        for edits in patches:
+        for patch in patches:
             try:
-                program = apply_patch(self.workload.program, list(edits))
+                program = patch.apply(self.workload.program)
                 out.append(EvalOutcome(fitness=self.workload.evaluate(program)))
             except (EditError, InvalidVariant) as e:
                 out.append(EvalOutcome(fitness=None, error=str(e)))
@@ -338,15 +340,27 @@ class ParallelEvaluator(Evaluator):
 
     # -- pool management ----------------------------------------------------
     def _payload(self) -> dict:
+        from .edits import operator_modules
+
+        mods = operator_modules()
+        if "__main__" in mods:
+            raise ValueError(
+                "a custom edit operator is registered in __main__, which "
+                "spawned workers cannot re-import; move the "
+                "@register_edit class into an importable module to use it "
+                "with ParallelEvaluator")
+        payload = {"edit_modules": mods}
         try:
-            return {"pickled": pickle.dumps(self.workload)}
+            payload["pickled"] = pickle.dumps(self.workload)
         except Exception:
             if self.spec is None:
                 raise ValueError(
                     f"workload {getattr(self.workload, 'name', '?')!r} is not "
                     "picklable and has no WorkloadSpec; pass spec= or use a "
                     "workload builder that attaches one")
-            return {"pickled": None, "spec": self.spec}
+            payload["pickled"] = None
+            payload["spec"] = self.spec
+        return payload
 
     def _ensure_pool(self):
         if self._pool is None:

@@ -1,298 +1,27 @@
-"""GEVO-ML mutation operators: Copy / Delete + typed use-def repair.
+"""DEPRECATED compatibility shim — the edit layer moved to
+:mod:`repro.core.edits`.
 
-Implements Section 4.1 of the paper:
-
-* ``delete`` — remove an operation; every dangling use of its result is
-  rebound to another in-scope value of the same type, chosen at random.
-* ``copy`` — clone an operation to another program point, rebind its operands
-  to in-scope values, and splice its result into a downstream operation
-  (Figure 5: the copied broadcast replaces the 1/batch constant).
-* **tensor-resize repair** — when no same-typed value exists, a randomly
-  chosen value is *resized* to fit: shrink by slicing values off the tensor's
-  edges (centered), grow by padding with constant **1** (Figure 3).  On TPU we
-  additionally prefer donor values whose trailing dims are already multiples
-  of 128 (MXU-friendly), a hardware adaptation noted in DESIGN.md.
-
-Edits are value-semantics records addressed by stable op ``uid``s and carry
-their own RNG seed, so a patch (list of edits) deterministically reproduces
-an individual — the GEVO patch representation needed for crossover.
+This module kept the hard-coded Copy/Delete operator pair; the pluggable
+registry (``@register_edit``), the first-class :class:`Patch`, the three new
+operators (``swap``, ``insert``, ``const_perturb``), operator-weighted
+sampling, and patch minimization all live in ``repro.core.edits`` and are
+re-exported from ``repro.core``.  Import from there; these aliases exist so
+pre-registry callers keep working and will be removed in a future PR.
 """
 
 from __future__ import annotations
 
-from dataclasses import dataclass, replace
-
 import numpy as np
 
-from .ir import IRTypeError, IRVerifyError, Program, TensorType
+from .edits import (Edit, EditError, Patch, apply_edit,  # noqa: F401
+                    apply_patch, resize_value)
+from .edits.sampling import OperatorWeights, sample_edit
+
+__all__ = ["Edit", "EditError", "Patch", "apply_edit", "apply_patch",
+           "resize_value", "random_edit"]
 
 
-class EditError(Exception):
-    """An edit cannot be applied to the current program (e.g. its target op
-    was removed by an earlier edit in the patch)."""
-
-
-@dataclass(frozen=True)
-class Edit:
-    kind: str            # "delete" | "copy"
-    target_uid: int      # delete: op to remove; copy: op to clone
-    dest_uid: int = -1   # copy: clone is inserted before this op, whose
-                         # operand is rewired to the clone's result
-    seed: int = 0        # drives all random repair choices — deterministic
-
-    def __str__(self) -> str:
-        if self.kind == "delete":
-            return f"delete(uid={self.target_uid})"
-        return f"copy(uid={self.target_uid} -> before uid={self.dest_uid})"
-
-
-# --------------------------------------------------------------------------
-# Tensor-resize repair (the paper's novel operator)
-# --------------------------------------------------------------------------
-
-def resize_value(prog: Program, value: int, target: TensorType,
-                 insert_at: int) -> tuple[int, int]:
-    """Insert pad/slice/reshape/convert ops so ``value`` becomes ``target``.
-
-    Returns (new_value, new_insert_cursor).  Shrinking slices centered
-    (dropping values from the tensor's edges); growing pads with value 1.
-    """
-    cur = prog.type_of(value)
-    if cur.dtype != target.dtype:
-        value = prog.add_op("convert", [value], {"new_dtype": target.dtype},
-                            insert_at=insert_at)
-        insert_at += 1
-        cur = prog.type_of(value)
-
-    # Rank adjustment: add leading 1-dims, or slice+drop extra leading dims.
-    if cur.rank < target.rank:
-        new_shape = (1,) * (target.rank - cur.rank) + cur.shape
-        value = prog.add_op("reshape", [value], {"new_shape": new_shape},
-                            insert_at=insert_at)
-        insert_at += 1
-    elif cur.rank > target.rank:
-        extra = cur.rank - target.rank
-        limit = (1,) * extra + cur.shape[extra:]
-        if cur.shape[:extra] != (1,) * extra:
-            value = prog.add_op(
-                "slice", [value],
-                {"start": (0,) * cur.rank, "limit": limit,
-                 "strides": (1,) * cur.rank}, insert_at=insert_at)
-            insert_at += 1
-        value = prog.add_op("reshape", [value],
-                            {"new_shape": cur.shape[extra:]},
-                            insert_at=insert_at)
-        insert_at += 1
-    cur = prog.type_of(value)
-
-    # Per-dim shrink (centered slice) then grow (pad with 1).
-    if any(c > t for c, t in zip(cur.shape, target.shape)):
-        start = tuple((c - t) // 2 if c > t else 0
-                      for c, t in zip(cur.shape, target.shape))
-        limit = tuple(s + min(c, t) for s, c, t
-                      in zip(start, cur.shape, target.shape))
-        value = prog.add_op("slice", [value],
-                            {"start": start, "limit": limit,
-                             "strides": (1,) * cur.rank}, insert_at=insert_at)
-        insert_at += 1
-        cur = prog.type_of(value)
-    if any(c < t for c, t in zip(cur.shape, target.shape)):
-        low = tuple((t - c) // 2 for c, t in zip(cur.shape, target.shape))
-        high = tuple(t - c - l for c, t, l
-                     in zip(cur.shape, target.shape, low))
-        value = prog.add_op("pad", [value],
-                            {"low": low, "high": high, "value": 1.0},
-                            insert_at=insert_at)
-        insert_at += 1
-    assert prog.type_of(value) == target
-    return value, insert_at
-
-
-# --------------------------------------------------------------------------
-# Donor selection
-# --------------------------------------------------------------------------
-
-def _pick_donor(prog: Program, scope: list[int], target: TensorType,
-                rng: np.random.Generator, exclude: set[int] = frozenset()
-                ) -> tuple[int, bool]:
-    """Pick an in-scope value to stand in for a ``target``-typed use.
-
-    Returns (value, needs_resize).  Prefers exact type matches; among
-    resize donors, prefers same-dtype and MXU-aligned (last dim % 128 == 0 or
-    matching) shapes.
-    """
-    cands = [v for v in scope if v not in exclude]
-    if not cands:
-        raise EditError("no in-scope values to rebind")
-    exact = [v for v in cands if prog.type_of(v) == target]
-    if exact:
-        return exact[int(rng.integers(len(exact)))], False
-
-    def score(v: int) -> float:
-        t = prog.type_of(v)
-        s = 0.0
-        if t.dtype == target.dtype:
-            s += 4.0
-        if t.rank == target.rank:
-            s += 2.0
-        if t.shape and target.shape and t.shape[-1] == target.shape[-1]:
-            s += 2.0
-        if t.shape and t.shape[-1] % 128 == 0:
-            s += 0.5  # MXU-friendly donor (TPU adaptation)
-        return s
-
-    weights = np.array([score(v) + 1e-3 for v in cands])
-    probs = weights / weights.sum()
-    return int(cands[int(rng.choice(len(cands), p=probs))]), True
-
-
-def _rebind_use(prog: Program, op_index: int, slot: int, target: TensorType,
-                rng: np.random.Generator, exclude: set[int]) -> int:
-    """Rebind operand ``slot`` of op at ``op_index`` to a repaired donor.
-    Returns how many ops were inserted (callers must shift indices)."""
-    scope = prog.defs_before(op_index)
-    donor, needs = _pick_donor(prog, scope, target, rng, exclude)
-    inserted = 0
-    if needs:
-        cursor = op_index
-        donor, new_cursor = resize_value(prog, donor, target, cursor)
-        inserted = new_cursor - cursor
-    prog.ops[op_index + inserted].operands[slot] = donor
-    return inserted
-
-
-# --------------------------------------------------------------------------
-# Edit application
-# --------------------------------------------------------------------------
-
-def apply_edit(prog: Program, edit: Edit) -> None:
-    """Apply one edit in place (with repair).  Raises EditError if the edit's
-    anchors are gone or repair is impossible."""
-    rng = np.random.default_rng(edit.seed)
-    if edit.kind == "delete":
-        _apply_delete(prog, edit, rng)
-    elif edit.kind == "copy":
-        _apply_copy(prog, edit, rng)
-    else:
-        raise EditError(f"unknown edit kind {edit.kind!r}")
-    _retype(prog)
-
-
-def _retype(prog: Program) -> None:
-    """Recompute result types downstream of rebinds; raise EditError if the
-    program no longer type-checks (repair should prevent this)."""
-    from .ir import infer_type
-    env = {vid: t for _, vid, t in prog.inputs}
-    for op in prog.ops:
-        try:
-            op.type = infer_type(op.opcode, [env[o] for o in op.operands],
-                                 op.attrs)
-        except (KeyError, IRTypeError) as e:
-            raise EditError(f"retype failed at {op.opcode}: {e}") from e
-        env[op.result] = op.type
-
-
-def _apply_delete(prog: Program, edit: Edit, rng: np.random.Generator) -> None:
-    idx = prog.op_index_by_uid(edit.target_uid)
-    if idx is None:
-        raise EditError(f"delete target uid {edit.target_uid} not found")
-    victim = prog.ops.pop(idx)
-    dead = {victim.result}
-    # Repair dangling operand uses (scan repeatedly: repairs insert ops).
-    i = 0
-    while i < len(prog.ops):
-        op = prog.ops[i]
-        for slot, o in enumerate(op.operands):
-            if o in dead:
-                i += _rebind_use(prog, i, slot, victim.type, rng, dead)
-                break
-        else:
-            i += 1
-            continue
-    # Repair dangling outputs.
-    for k, o in enumerate(prog.outputs):
-        if o in dead:
-            scope = prog.defs_before(len(prog.ops))
-            donor, needs = _pick_donor(prog, scope, victim.type, rng, dead)
-            if needs:
-                donor, _ = resize_value(prog, donor, victim.type, len(prog.ops))
-            prog.outputs[k] = donor
-
-
-def _apply_copy(prog: Program, edit: Edit, rng: np.random.Generator) -> None:
-    src_idx = prog.op_index_by_uid(edit.target_uid)
-    dst_idx = prog.op_index_by_uid(edit.dest_uid)
-    if src_idx is None or dst_idx is None:
-        raise EditError("copy anchors not found")
-    src = prog.ops[src_idx]
-    if src.opcode == "constant":
-        clone_operand_types: list[TensorType] = []
-    else:
-        clone_operand_types = [prog.type_of(o) for o in src.operands]
-
-    clone = src.clone()
-    clone.result = prog.fresh_value()
-    clone.uid = prog.fresh_uid()
-    prog.ops.insert(dst_idx, clone)
-    pos = dst_idx
-
-    # Rebind clone operands to in-scope values ("connects variables").
-    scope = set(prog.defs_before(pos))
-    for slot, (o, t) in enumerate(zip(list(clone.operands),
-                                      clone_operand_types)):
-        if o in scope:
-            continue
-        inserted = _rebind_use(prog, pos, slot, t, rng, {clone.result})
-        pos += inserted
-        scope = set(prog.defs_before(pos))
-
-    # Splice the clone's result into a downstream consumer.
-    consumer_idx = None
-    for j in range(pos + 1, len(prog.ops)):
-        if prog.ops[j].operands:
-            consumer_idx = j
-            break
-    if consumer_idx is None:
-        # No downstream op with operands: rewire a program output instead.
-        k = int(rng.integers(len(prog.outputs)))
-        target = prog.type_of(prog.outputs[k])
-        v = clone.result
-        if prog.type_of(v) != target:
-            v, _ = resize_value(prog, v, target, len(prog.ops))
-        prog.outputs[k] = v
-        return
-    consumer = prog.ops[consumer_idx]
-    slot = int(rng.integers(len(consumer.operands)))
-    target = prog.type_of(consumer.operands[slot])
-    v = clone.result
-    if prog.type_of(v) != target:
-        v, _ = resize_value(prog, v, target, consumer_idx)
-    consumer.operands[slot] = v
-
-
-def apply_patch(original: Program, edits: list[Edit]) -> Program:
-    """Reapply each edit in sequence to a clone of the original program
-    (Section 4.2: patches always apply against the original)."""
-    prog = original.clone()
-    for e in edits:
-        apply_edit(prog, e)
-    prog.verify()
-    return prog
-
-
-# --------------------------------------------------------------------------
-# Random edit sampling
-# --------------------------------------------------------------------------
-
-def random_edit(prog: Program, rng: np.random.Generator) -> Edit:
-    """Sample a Copy or Delete edit against the current program's uids."""
-    if not prog.ops:
-        raise EditError("empty program")
-    kind = "delete" if rng.random() < 0.5 else "copy"
-    uids = [op.uid for op in prog.ops]
-    if kind == "delete":
-        return Edit("delete", target_uid=int(rng.choice(uids)),
-                    seed=int(rng.integers(2 ** 31)))
-    return Edit("copy", target_uid=int(rng.choice(uids)),
-                dest_uid=int(rng.choice(uids)),
-                seed=int(rng.integers(2 ** 31)))
+def random_edit(prog, rng: np.random.Generator) -> Edit:
+    """Deprecated: sample a legacy (50/50 copy/delete) edit.  Use
+    ``repro.core.edits.sample_edit`` with an ``OperatorWeights`` mix."""
+    return sample_edit(prog, rng, OperatorWeights.legacy())

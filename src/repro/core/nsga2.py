@@ -111,3 +111,18 @@ def select_elites(objs: np.ndarray, n_elite: int) -> list[int]:
 
 def pareto_front(objs: np.ndarray) -> list[int]:
     return fast_non_dominated_sort(objs)[0]
+
+
+def hypervolume_2d(front, ref: tuple[float, float]) -> float:
+    """Dominated hypervolume of a 2-objective (minimization) front w.r.t.
+    reference point ``ref``.  Points not dominating ``ref`` contribute
+    nothing.  Used by the operator-mix A/B to compare Pareto fronts with a
+    single scalar."""
+    pts = sorted(tuple(p) for p in front
+                 if p[0] <= ref[0] and p[1] <= ref[1])
+    hv, prev_e = 0.0, ref[1]
+    for t, e in pts:
+        if e < prev_e:
+            hv += (ref[0] - t) * (prev_e - e)
+            prev_e = e
+    return hv

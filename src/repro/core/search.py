@@ -9,6 +9,14 @@ Generation structure per the paper:
   * invalid variants (failed execution / un-applicable patches) are
     resampled until a valid individual is found.
 
+Individuals carry a first-class :class:`~repro.core.edits.Patch`; mutation
+samples edits through the operator registry with a configurable
+:class:`~repro.core.edits.OperatorWeights` mix (``operators=``), and
+per-operator proposed / applied / valid / elite-survival counters
+(:class:`~repro.core.edits.OperatorStats`) are snapshotted into every
+``SearchResult.history`` row and checkpoint — the paper's Sec. 6 mutation
+analysis as a free by-product.
+
 Evaluation goes through the :mod:`repro.core.evaluator` engine: candidates
 for a generation are drawn speculatively in batches and handed to the
 evaluator as a unit, so a ``ParallelEvaluator`` overlaps variant executions
@@ -20,8 +28,9 @@ carries its own seed), so identical patches are identical programs; with a
 persistent cache, repeated or resumed runs never re-measure a known variant.
 
 Long searches checkpoint each generation (population + RNG state + cache
-stats, via :mod:`repro.core.serialize`) and ``run(resume=True)`` continues a
-checkpointed search to the same result as an uninterrupted one.
+stats + operator stats, via :mod:`repro.core.serialize`) and
+``run(resume=True)`` continues a checkpointed search to the same result as
+an uninterrupted one.
 """
 
 from __future__ import annotations
@@ -34,9 +43,10 @@ from dataclasses import dataclass, field
 import numpy as np
 
 from .crossover import messy_crossover
+from .edits import (Edit, EditError, OperatorStats, OperatorWeights, Patch,
+                    sample_edit)
 from .evaluator import Evaluator, FitnessCache, SerialEvaluator
 from .fitness import InvalidVariant
-from .mutation import Edit, EditError, apply_patch, random_edit
 from .nsga2 import pareto_front, rank_select, tournament
 from .serialize import (patch_doc, patch_from_doc, rng_from_state,
                         rng_state_doc)
@@ -44,8 +54,12 @@ from .serialize import (patch_doc, patch_from_doc, rng_from_state,
 
 @dataclass(frozen=True)
 class Individual:
-    edits: tuple[Edit, ...]
+    patch: Patch
     fitness: tuple[float, float]  # (time, error) — minimized
+
+    @property
+    def edits(self) -> tuple[Edit, ...]:
+        return self.patch.edits
 
 
 @dataclass
@@ -61,9 +75,19 @@ class SearchResult:
     def best_by_error(self) -> Individual:
         return min(self.pareto, key=lambda i: i.fitness[1])
 
+    def operator_stats(self) -> dict:
+        """Final per-operator proposed/valid/elite counters."""
+        return self.history[-1]["operators"] if self.history else {}
+
 
 class GevoML:
-    """NSGA-II search over Copy/Delete patches of one workload's program.
+    """NSGA-II search over registered-operator patches of one workload's
+    program.
+
+    ``operators`` selects the mutation sampling mix: an
+    :class:`OperatorWeights`, a ``{name: weight}`` mapping, a CLI spec string
+    (``"legacy"``, ``"all"``, ``"copy=1,delete=1,const_perturb=0.5"``), or
+    ``None`` for uniform over every registered operator.
 
     ``evaluator`` defaults to an in-process :class:`SerialEvaluator`; pass a
     :class:`~repro.core.evaluator.ParallelEvaluator` (or use ``cache_path``
@@ -75,6 +99,7 @@ class GevoML:
                  init_mutations: int = 3, crossover_rate: float = 0.8,
                  mutation_rate: float = 0.5, max_tries: int = 40,
                  seed: int = 0, verbose: bool = False,
+                 operators: OperatorWeights | dict | str | None = None,
                  evaluator: Evaluator | None = None,
                  cache_path: str | None = None,
                  checkpoint_dir: str | None = None):
@@ -87,6 +112,8 @@ class GevoML:
         self.max_tries = max_tries
         self.rng = np.random.default_rng(seed)
         self.verbose = verbose
+        self.operators = OperatorWeights.coerce(operators).validate()
+        self.stats = OperatorStats(self.operators.names())
         self._owns_evaluator = evaluator is None
         if evaluator is None:
             evaluator = SerialEvaluator(workload, cache=FitnessCache(cache_path))
@@ -125,49 +152,53 @@ class GevoML:
         return False
 
     # -- candidate generation (parent process; consumes self.rng) ----------
-    def _mutate_edits(self, edits: list[Edit]) -> list[Edit] | None:
-        """Append one fresh random edit (sampled against the patched program,
-        so uids of earlier clones are addressable)."""
+    def _mutate(self, patch: Patch) -> Patch | None:
+        """Append one fresh edit (sampled per the operator weights against
+        the patched program, so uids of earlier clones are addressable)."""
         try:
-            prog = apply_patch(self.w.program, edits)
+            prog = patch.apply(self.w.program)
         except EditError:
             return None
         for _ in range(4):
             try:
-                e = random_edit(prog, self.rng)
-                new = edits + [e]
-                apply_patch(self.w.program, new)
-                return new
+                e = sample_edit(prog, self.rng, self.operators)
             except EditError:
                 continue
+            self.stats.count_proposed(e.kind)
+            try:
+                new = patch.append(e)
+                new.apply(self.w.program)
+            except EditError:
+                continue
+            self.stats.count_applied(e.kind)
+            return new
         return None
 
-    def _initial_candidate(self) -> list[Edit] | None:
-        edits: list[Edit] = []
+    def _initial_candidate(self) -> Patch | None:
+        patch = Patch()
         for _ in range(self.init_mutations):
-            nxt = self._mutate_edits(edits)
+            nxt = self._mutate(patch)
             if nxt is None:
                 return None
-            edits = nxt
-        return edits
+            patch = nxt
+        return patch
 
     def _offspring_candidate(self, pop: list[Individual], rank, crowd
-                             ) -> list[Edit] | None:
+                             ) -> Patch | None:
         a = pop[tournament(self.rng, rank, crowd)]
         b = pop[tournament(self.rng, rank, crowd)]
         if self.rng.random() < self.crossover_rate:
-            child_edits, alt = messy_crossover(
-                list(a.edits), list(b.edits), self.rng)
-            if not child_edits and alt:
-                child_edits = alt
+            child, alt = messy_crossover(a.patch, b.patch, self.rng)
+            if not child and alt:
+                child = alt
         else:
-            child_edits = list(a.edits)
-        if self.rng.random() < self.mutation_rate or not child_edits:
-            mutated = self._mutate_edits(child_edits)
+            child = a.patch
+        if self.rng.random() < self.mutation_rate or not child:
+            mutated = self._mutate(child)
             if mutated is None:
                 return None
-            child_edits = mutated
-        return child_edits
+            child = mutated
+        return child
 
     # -- batched fill: speculate candidates, evaluate as one dispatch ------
     def _fill(self, n: int, candidate_fn, what: str) -> list[Individual]:
@@ -175,16 +206,17 @@ class GevoML:
         for _ in range(self.max_tries):
             if len(filled) >= n:
                 break
-            batch = []
+            batch: list[Patch] = []
             for _ in range(n - len(filled)):
                 c = candidate_fn()
                 if c is not None:
-                    batch.append(tuple(c))
+                    batch.append(c)
             if not batch:
                 continue
-            for edits, out in zip(batch, self.evaluator.evaluate_batch(batch)):
+            for patch, out in zip(batch, self.evaluator.evaluate_batch(batch)):
                 if out.ok:
-                    filled.append(Individual(edits, out.fitness))
+                    filled.append(Individual(patch, out.fitness))
+                    self.stats.count_valid(patch.kinds())
                 else:
                     self._n_invalid_outcomes += 1
         if len(filled) < n:
@@ -203,10 +235,11 @@ class GevoML:
             "gen": gen,
             "program_fingerprint": self.evaluator.fingerprint,
             "original_fitness": list(original),
-            "population": [{"edits": patch_doc(i.edits),
+            "population": [{"edits": patch_doc(i.patch),
                             "fitness": list(i.fitness)} for i in pop],
             "rng_state": rng_state_doc(self.rng),
             "history": history,
+            "operator_stats": self.stats.to_doc(),
             "counters": {"n_invalid": self._n_invalid_outcomes,
                          "evaluator": self.evaluator.stats()},
         }
@@ -245,6 +278,7 @@ class GevoML:
             history = list(state["history"])
             self.rng = rng_from_state(state["rng_state"])
             self._n_invalid_outcomes = state["counters"]["n_invalid"]
+            self.stats = OperatorStats.from_doc(state.get("operator_stats"))
             # restore cumulative counters to their snapshot values so
             # post-resume history rows continue the uninterrupted series
             # (assignment, not +=: the same instance may be resuming)
@@ -258,7 +292,7 @@ class GevoML:
                                          if history else 0.0)
         else:
             t0 = _time.perf_counter()
-            first = self.evaluator.evaluate_one(())
+            first = self.evaluator.evaluate_one(Patch())
             if not first.ok:
                 raise InvalidVariant(
                     f"original program failed evaluation: {first.error}")
@@ -272,6 +306,8 @@ class GevoML:
             objs = np.array([i.fitness for i in pop])
             rank, crowd, elite_idx = rank_select(objs, self.n_elite)
             elites = [pop[i] for i in elite_idx]
+            for ind in elites:
+                self.stats.count_elite(ind.patch.kinds())
             offspring = self._fill(
                 self.pop_size - len(elites),
                 lambda: self._offspring_candidate(pop, rank, crowd),
@@ -288,6 +324,7 @@ class GevoML:
                 "invalid": self.n_invalid,
                 "cache_hits": self.cache.hits,
                 "cache_hit_rate": round(self.cache.hit_rate, 4),
+                "operators": self.stats.snapshot(),
                 "wall_s": _time.perf_counter() - t0,
             })
             if self.verbose:
@@ -310,6 +347,6 @@ class GevoML:
                             pareto=pareto, history=history)
 
 
-def describe_patch(edits: tuple[Edit, ...]) -> str:
-    """Human-readable mutation analysis line (Sections 6.1/6.2 style)."""
-    return "; ".join(str(e) for e in edits) or "<original>"
+def describe_patch(edits) -> str:
+    """Deprecated: use ``Patch.describe()``.  Kept for pre-Patch callers."""
+    return Patch.coerce(edits).describe()

@@ -23,8 +23,10 @@ import os
 
 import numpy as np
 
+from .edits import Edit, Patch
+from .edits import edit_from_doc as _registry_edit_from_doc
+from .edits import edit_to_doc as _registry_edit_to_doc
 from .ir import Operation, Program, TensorType
-from .mutation import Edit
 
 # --------------------------------------------------------------------------
 # Canonical program / patch documents
@@ -93,32 +95,32 @@ def program_fingerprint(program: Program) -> str:
 
 
 def edit_doc(e: Edit) -> dict:
-    return {"kind": e.kind, "target_uid": e.target_uid,
-            "dest_uid": e.dest_uid, "seed": e.seed}
+    """JSON doc for one edit, delegated to its registered operator (so a
+    custom operator controls its own wire format)."""
+    return _registry_edit_to_doc(e)
 
 
 def edit_from_doc(d: dict) -> Edit:
-    return Edit(kind=d["kind"], target_uid=d["target_uid"],
-                dest_uid=d["dest_uid"], seed=d["seed"])
+    return _registry_edit_from_doc(d)
 
 
-def patch_doc(edits) -> list[dict]:
-    return [edit_doc(e) for e in edits]
+def patch_doc(patch) -> list[dict]:
+    return Patch.coerce(patch).to_doc()
 
 
-def patch_from_doc(docs) -> tuple[Edit, ...]:
-    return tuple(edit_from_doc(d) for d in docs)
+def patch_from_doc(docs) -> Patch:
+    return Patch.from_doc(docs)
 
 
-def patch_key(fingerprint: str, edits) -> str:
+def patch_key(fingerprint: str, patch) -> str:
     """Content address of (program, patch): the persistent fitness cache key.
 
     Patches are deterministic (each edit carries its own repair seed), so the
     key fully identifies the variant program — and therefore its ``static``
-    fitness — across processes, runs, and machines."""
-    blob = json.dumps({"program": fingerprint, "edits": patch_doc(edits)},
-                      sort_keys=True, separators=(",", ":"))
-    return hashlib.sha256(blob.encode()).hexdigest()
+    fitness — across processes, runs, and machines.  Delete/copy-only patch
+    docs are byte-identical to the pre-registry format, so persistent caches
+    written before the operator registry existed remain valid."""
+    return Patch.coerce(patch).key(fingerprint)
 
 
 # --------------------------------------------------------------------------
@@ -187,7 +189,7 @@ def load_program(path: str) -> Program:
 # --------------------------------------------------------------------------
 
 
-def save_patches(patches: list[tuple[Edit, ...]], path: str,
+def save_patches(patches, path: str,
                  fitnesses: list[tuple] | None = None) -> None:
     doc = [{"edits": patch_doc(patch),
             "fitness": list(fitnesses[i]) if fitnesses else None}
@@ -196,6 +198,6 @@ def save_patches(patches: list[tuple[Edit, ...]], path: str,
         json.dump(doc, f, indent=1)
 
 
-def load_patches(path: str) -> list[tuple[Edit, ...]]:
+def load_patches(path: str) -> list[Patch]:
     doc = json.load(open(path))
     return [patch_from_doc(p["edits"]) for p in doc]

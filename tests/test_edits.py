@@ -1,0 +1,285 @@
+"""The pluggable edit layer: registry, Patch algebra, operator weights,
+patch minimization.  Hypothesis property tests for the operator contract
+live in test_edits_props.py (they skip without hypothesis; these don't)."""
+
+import numpy as np
+import pytest
+
+from repro.core import (Edit, EditError, EditOp, OperatorWeights, Patch,
+                        minimize_patch, register_edit, registered_ops,
+                        sample_edit)
+from repro.core.builder import Builder
+from repro.core.crossover import messy_crossover
+from repro.core.edits import (edit_from_doc, edit_to_doc, get_edit_op)
+from repro.core.edits.base import _REGISTRY
+from repro.core.evaluator import SerialEvaluator
+from repro.core.search import GevoML
+from repro.workloads.twofc import build_twofc_step, build_twofc_training_workload
+
+BUILTINS = ("const_perturb", "copy", "delete", "insert", "swap")
+
+
+def _base_program():
+    b = Builder("mlp")
+    x = b.input("x", (4, 8))
+    w1 = b.const(np.random.RandomState(0).randn(8, 16).astype(np.float32))
+    h = b.relu(b.dot(x, w1))
+    w2 = b.const(np.random.RandomState(1).randn(16, 6).astype(np.float32))
+    b.output(b.softmax(b.dot(h, w2)))
+    return b.done()
+
+
+# -- registry ----------------------------------------------------------------
+
+def test_builtins_registered():
+    assert registered_ops() == BUILTINS
+
+
+def test_unknown_kind_raises_edit_error():
+    p = _base_program()
+    with pytest.raises(EditError, match="unknown edit kind"):
+        Patch((Edit("warp", target_uid=0),)).apply(p)
+
+
+def test_register_edit_plugs_into_sampling_and_docs():
+    calls = []
+
+    @register_edit("test_noop")
+    class NoopOp(EditOp):
+        def propose(self, prog, rng):
+            return Edit("test_noop", target_uid=prog.ops[0].uid,
+                        seed=int(rng.integers(2 ** 31)))
+
+        def apply(self, prog, edit, rng):
+            calls.append(edit)
+
+    try:
+        p = _base_program()
+        assert "test_noop" in registered_ops()
+        rng = np.random.default_rng(0)
+        e = sample_edit(p, rng, OperatorWeights.of(test_noop=1.0))
+        assert e.kind == "test_noop"
+        q = Patch((e,)).apply(p)
+        assert calls and str(q) == str(p)
+        assert edit_from_doc(edit_to_doc(e)) == e
+    finally:
+        del _REGISTRY["test_noop"]
+
+
+def test_parallel_payload_ships_operator_modules(tiny_workload):
+    """Spawned workers re-import the modules that register edit operators,
+    so registry dispatch works inside ParallelEvaluator; operators defined
+    in __main__ (not re-importable under spawn) fail fast with guidance."""
+    from repro.core.edits import operator_modules
+    from repro.core.evaluator import ParallelEvaluator
+
+    assert operator_modules() == ("repro.core.edits.ops",)
+    ev = ParallelEvaluator(tiny_workload, n_workers=2)
+    assert ev._payload()["edit_modules"] == ("repro.core.edits.ops",)
+    ev.close()
+
+    @register_edit("test_main_op")
+    class MainOp(EditOp):
+        pass
+
+    MainOp.__module__ = "__main__"
+    try:
+        ev = ParallelEvaluator(tiny_workload, n_workers=2)
+        with pytest.raises(ValueError, match="importable module"):
+            ev._payload()
+        ev.close()
+    finally:
+        del _REGISTRY["test_main_op"]
+
+
+# -- operator behaviour -------------------------------------------------------
+
+def test_swap_preserves_op_count_and_types():
+    p = build_twofc_step(batch=8, in_dim=32, hidden=16)
+    rng = np.random.default_rng(3)
+    e = get_edit_op("swap").propose(p, rng)
+    q = Patch((e,)).apply(p)
+    assert len(q.ops) == len(p.ops)  # pure rewiring, no repair ops
+    assert [op.type for op in q.ops] == [op.type for op in p.ops]
+    assert any(a.operands != b.operands for a, b in zip(p.ops, q.ops))
+
+
+def test_const_perturb_scales_a_scalar_constant():
+    p = build_twofc_step(batch=8, in_dim=32, hidden=16, lr=0.01)
+    rng = np.random.default_rng(5)
+    e = get_edit_op("const_perturb").propose(p, rng)
+    q = Patch((e,)).apply(p)
+    before = p.ops[p.op_index_by_uid(e.target_uid)].attrs["value"]
+    after = q.ops[q.op_index_by_uid(e.target_uid)].attrs["value"]
+    np.testing.assert_allclose(np.asarray(after),
+                               np.asarray(before) * np.float32(e.param))
+
+
+def test_insert_rewires_one_operand():
+    p = build_twofc_step(batch=8, in_dim=32, hidden=16)
+    rng = np.random.default_rng(7)
+    e = get_edit_op("insert").propose(p, rng)
+    q = Patch((e,)).apply(p)
+    q.verify()
+    i = p.op_index_by_uid(e.target_uid)
+    j = q.op_index_by_uid(e.target_uid)
+    assert q.ops[j].operands != p.ops[i].operands or len(q.ops) > len(p.ops)
+
+
+# -- Patch algebra ------------------------------------------------------------
+
+def test_patch_algebra_and_hashing():
+    p = _base_program()
+    rng = np.random.default_rng(0)
+    e1, e2 = (sample_edit(p, rng) for _ in range(2))
+    patch = Patch() + e1 + e2
+    assert len(patch) == 2 and list(patch) == [e1, e2]
+    assert patch.without(0) == Patch((e2,))
+    assert hash(Patch((e1, e2))) == hash(patch)  # hashable, value semantics
+    assert Patch.coerce([e1, e2]) == patch
+    assert patch.key("fp") != patch.without(0).key("fp")
+    assert Patch.from_doc(patch.to_doc()) == patch
+    assert Patch().describe() == "<original>"
+    assert e1.kind in patch.describe()
+
+
+def test_doc_roundtrip_fails_fast_on_unregistered_kind():
+    """Decoding a patch doc written with a plugin operator must raise
+    EditError when the plugin is not imported — not silently decode with
+    the generic schema and drop operator-specific state."""
+    with pytest.raises(EditError, match="unknown edit kind"):
+        Patch.from_doc([{"kind": "not_registered", "target_uid": 1}])
+    with pytest.raises(EditError, match="unknown edit kind"):
+        Patch((Edit("not_registered", target_uid=1),)).to_doc()
+
+
+def test_legacy_patch_docs_unchanged():
+    """delete/copy docs keep the pre-registry wire format, so persistent
+    fitness caches written before the registry redesign stay addressable."""
+    d = edit_to_doc(Edit("delete", target_uid=3, seed=7))
+    assert d == {"kind": "delete", "target_uid": 3, "dest_uid": -1, "seed": 7}
+    c = edit_to_doc(Edit("copy", target_uid=1, dest_uid=4, seed=9))
+    assert c == {"kind": "copy", "target_uid": 1, "dest_uid": 4, "seed": 9}
+
+
+# -- crossover on Patch -------------------------------------------------------
+
+def test_messy_crossover_returns_patches():
+    p = _base_program()
+    rng = np.random.default_rng(1)
+    a = Patch((sample_edit(p, rng), sample_edit(p, rng)))
+    b = Patch((sample_edit(p, rng),))
+    c1, c2 = messy_crossover(a, b, rng)
+    assert isinstance(c1, Patch) and isinstance(c2, Patch)
+    assert sorted(map(hash, c1.edits + c2.edits)) == \
+        sorted(map(hash, a.edits + b.edits))
+
+
+def test_messy_crossover_empty_pool_degenerate():
+    rng = np.random.default_rng(0)
+    state = rng.bit_generator.state
+    c1, c2 = messy_crossover(Patch(), Patch(), rng)
+    assert c1 == Patch() and c2 == Patch()
+    assert rng.bit_generator.state == state  # no RNG consumed on the guard
+
+
+# -- operator weights ---------------------------------------------------------
+
+def test_operator_weights_parse_and_validate():
+    assert OperatorWeights.parse("legacy").names() == ("copy", "delete")
+    assert OperatorWeights.parse("all").names() == registered_ops()
+    w = OperatorWeights.parse("delete=2,copy=1")
+    np.testing.assert_allclose(w.probs(), [1 / 3, 2 / 3])
+    with pytest.raises(ValueError):
+        OperatorWeights.of(delete=0.0)
+    with pytest.raises(EditError):
+        OperatorWeights.of(bogus=1.0).sample(np.random.default_rng(0))
+
+
+def test_typoed_operator_name_fails_fast_at_search_construction(tiny_workload):
+    """A bad --operators name must raise immediately, not be silently
+    resampled by the mutation retry loop until max_tries exhausts."""
+    with pytest.raises(EditError, match="unknown edit kind"):
+        GevoML(tiny_workload, operators="dlete=1")
+
+
+def test_sample_edit_respects_pinned_weights():
+    p = _base_program()
+    rng = np.random.default_rng(0)
+    kinds = {sample_edit(p, rng, OperatorWeights.legacy()).kind
+             for _ in range(40)}
+    assert kinds == {"copy", "delete"}
+
+
+# -- minimization -------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def tiny_workload():
+    return build_twofc_training_workload(batch=32, hidden=16, steps=5,
+                                         n_train=256, n_test=256)
+
+
+def test_minimize_patch_drops_redundant_edits(tiny_workload):
+    """A patch padded with a fitness-neutral edit minimizes to fewer edits at
+    identical fitness, re-measuring only uncached sub-patches."""
+    ev = SerialEvaluator(tiny_workload)
+    prog = tiny_workload.program
+    rng = np.random.default_rng(2)
+    # find a single edit that changes fitness, then pad it with a
+    # const_perturb of scale 1.0-equivalent: perturbing the relu zero
+    # constant by any factor is a no-op (0 * s == 0)
+    zero_uids = [op.uid for op in prog.ops
+                 if op.opcode == "constant" and op.type.size == 1
+                 and float(np.asarray(op.attrs["value"])) == 0.0]
+    assert zero_uids
+    noop = Edit("const_perturb", target_uid=zero_uids[0], seed=1, param=2.0)
+    orig = ev.evaluate_one(Patch()).fitness
+    for _ in range(40):
+        e = sample_edit(prog, rng)
+        single = ev.evaluate_one(Patch((e,)))
+        if not single.ok or single.fitness == orig:
+            continue  # need an edit that actually changes fitness
+        patch = Patch((e, noop))
+        out = ev.evaluate_one(patch)
+        if out.ok and out.fitness == single.fitness:
+            break
+    else:
+        pytest.fail("no suitable padded patch found")
+    hits0, evals0 = ev.cache.hits, ev.n_evals
+    small, fit = minimize_patch(patch, ev, expect_fitness=out.fitness)
+    assert fit == out.fitness
+    assert small == Patch((e,))  # the neutral edit was dropped
+    # baseline, the (e,) sub-patch, and the final () probe were all cached —
+    # only the unseen (noop,) sub-patch was executed
+    assert ev.cache.hits >= hits0 + 3
+    assert ev.n_evals - evals0 == 1
+    ev.close()
+
+
+def test_minimize_best_individual_after_search(tiny_workload):
+    """Acceptance path: ddmin the search's best-by-time individual against
+    the search's own warm cache — identical fitness, <= edits, and the
+    baseline re-evaluation is a pure cache hit."""
+    ev = SerialEvaluator(tiny_workload)
+    s = GevoML(tiny_workload, pop_size=6, n_elite=3, seed=0,
+               init_mutations=2, evaluator=ev)
+    res = s.run(generations=2)
+    best = res.best_by_time()
+    hits0 = ev.cache.hits
+    entries0 = len(ev.cache)
+    small, fit = minimize_patch(best.patch, ev, expect_fitness=best.fitness)
+    assert fit == best.fitness
+    assert len(small) <= len(best.patch)
+    assert ev.cache.hits > hits0            # warm-cache lookups happened
+    # every fresh execution during minimization is a new cache entry:
+    # nothing already measured was re-measured
+    assert ev.n_evals == len(ev.cache)
+    assert ev.evaluate_one(small).fitness == best.fitness
+    ev.close()
+
+
+def test_minimize_rejects_invalid_patch(tiny_workload):
+    ev = SerialEvaluator(tiny_workload)
+    with pytest.raises(ValueError, match="invalid patch"):
+        minimize_patch(Patch((Edit("delete", target_uid=10_000),)), ev)
+    ev.close()

@@ -1,0 +1,82 @@
+"""Hypothesis property tests for the edit-operator registry contract:
+on 50 random programs, every registered operator is deterministic given
+``(uid, seed)``, survives doc round-trip bit-identically, and either
+applies cleanly or raises ``EditError`` — never any other exception."""
+
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis",
+                    reason="property tests need hypothesis (pip install "
+                           ".[test])")
+from hypothesis import given, settings, strategies as st
+
+from repro.core import Edit, EditError, Patch, registered_ops, sample_edit
+from repro.core.builder import Builder
+from repro.core.edits import edit_from_doc, edit_to_doc, get_edit_op
+
+
+def _base_program():
+    b = Builder("mlp")
+    x = b.input("x", (4, 8))
+    w1 = b.const(np.random.RandomState(0).randn(8, 16).astype(np.float32))
+    h = b.relu(b.dot(x, w1))
+    w2 = b.const(np.random.RandomState(1).randn(16, 6).astype(np.float32))
+    b.output(b.softmax(b.dot(h, w2)))
+    return b.done()
+
+
+def _random_program(seed: int):
+    """A random program: the base MLP under a short random registry patch."""
+    p = _base_program()
+    rng = np.random.default_rng(seed)
+    for _ in range(int(rng.integers(0, 4))):
+        try:
+            e = sample_edit(p, rng)
+            p = Patch((e,)).apply(p)
+        except EditError:
+            continue
+    return p
+
+
+@settings(max_examples=50, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_operator_contract_on_random_programs(seed):
+    """Every registered operator, on a random program: propose either raises
+    EditError or yields an edit that (a) round-trips through docs
+    bit-identically, and (b) applies to an identical, verifying program on
+    every re-application — or raises EditError, never anything else."""
+    p = _random_program(seed)
+    rng = np.random.default_rng(seed)
+    for name in registered_ops():
+        op = get_edit_op(name)
+        try:
+            e = op.propose(p, rng)
+        except EditError:
+            continue
+        assert e.kind == name
+        assert edit_from_doc(edit_to_doc(e)) == e  # bit-identical round-trip
+        try:
+            q1 = Patch((e,)).apply(p)
+        except EditError:
+            continue
+        q1.verify()
+        q2 = Patch((e,)).apply(p)  # deterministic given (uid, seed)
+        assert str(q1) == str(q2)
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_stale_uid_raises_edit_error_not_crash(seed):
+    """Edits addressing uids the program never had must fail as EditError."""
+    p = _random_program(seed)
+    rng = np.random.default_rng(seed)
+    for name in registered_ops():
+        try:
+            e = get_edit_op(name).propose(p, rng)
+        except EditError:
+            continue
+        stale = Edit(e.kind, target_uid=10_000 + seed, dest_uid=e.dest_uid,
+                     seed=e.seed, param=e.param)
+        with pytest.raises(EditError):
+            Patch((stale,)).apply(p)

@@ -1,8 +1,12 @@
 """End-to-end GEVO-ML search behaviour on a tiny training workload."""
 
+import json
+import os
+
 import numpy as np
 import pytest
 
+from repro.core import OperatorWeights, registered_ops
 from repro.core.fitness import InvalidVariant, static_time
 from repro.core.search import GevoML, describe_patch
 from repro.workloads.twofc import build_twofc_training_workload
@@ -54,6 +58,55 @@ def test_pareto_not_worse_than_original(result):
 def test_describe_patch(result):
     txt = describe_patch(result.pareto[0].edits)
     assert isinstance(txt, str) and len(txt) > 0
+    assert txt == result.pareto[0].patch.describe()
+
+
+def test_history_carries_per_operator_stats(result):
+    """Every history row snapshots proposed/valid/elite for all five
+    registered operators (default weights sample them all)."""
+    for row in result.history:
+        ops = row["operators"]
+        assert tuple(sorted(ops)) == registered_ops()
+        for counters in ops.values():
+            assert set(counters) == {"proposed", "applied", "valid", "elite"}
+            assert all(v >= 0 for v in counters.values())
+            assert counters["applied"] <= counters["proposed"]
+    last = result.history[-1]["operators"]
+    assert sum(r["proposed"] for r in last.values()) > 0
+    assert sum(r["elite"] for r in last.values()) > 0
+    # counters are cumulative: monotone across generations
+    for a, b in zip(result.history, result.history[1:]):
+        for name in a["operators"]:
+            for f in ("proposed", "applied", "valid", "elite"):
+                assert b["operators"][name][f] >= a["operators"][name][f]
+
+
+def test_legacy_pinned_search_matches_pre_registry_behaviour(tiny_workload):
+    """With weights pinned to the paper's {copy, delete}, the redesigned
+    search still reaches a Pareto front no worse than the original program
+    (the pre-registry guarantee), samples only the two legacy kinds, and
+    reports zero activity for the new operators."""
+    s = GevoML(tiny_workload, pop_size=8, n_elite=4, seed=0,
+               init_mutations=2, operators=OperatorWeights.legacy())
+    res = s.run(generations=3)
+    kinds = {k for i in res.population for k in i.patch.kinds()}
+    assert kinds <= {"copy", "delete"}
+    t0, e0 = res.original_fitness
+    for ind in res.pareto:
+        t, e = ind.fitness
+        assert t <= t0 * 1.001 or e <= e0 + 1e-9
+    stats = res.operator_stats()
+    for name in ("swap", "insert", "const_perturb"):
+        assert name not in stats or stats[name]["proposed"] == 0
+
+
+def test_checkpoint_contains_operator_stats(tiny_workload, tmp_path):
+    ck = str(tmp_path / "ck")
+    s = GevoML(tiny_workload, pop_size=6, n_elite=3, seed=0,
+               init_mutations=1, checkpoint_dir=ck)
+    res = s.run(generations=2)
+    snap = json.load(open(os.path.join(ck, "latest.json")))
+    assert snap["operator_stats"] == res.history[-1]["operators"]
 
 
 def test_static_time_positive(tiny_workload):

@@ -4,6 +4,7 @@ GEVO workload."""
 import numpy as np
 import pytest
 
+from repro.core.edits import Patch
 from repro.core.interp import evaluate
 from repro.core.mutation import apply_patch, random_edit
 from repro.core.serialize import (load_patches, load_program, save_patches,
@@ -43,11 +44,11 @@ def test_mutated_program_roundtrip(tmp_path):
 def test_patch_roundtrip(tmp_path):
     p = build_twofc_step(batch=4, in_dim=8, hidden=4)
     rng = np.random.default_rng(1)
-    patches = [(random_edit(p, rng),), (random_edit(p, rng),)]
+    patches = [Patch((random_edit(p, rng),)), Patch((random_edit(p, rng),))]
     path = str(tmp_path / "patches.json")
     save_patches(patches, path, fitnesses=[(1.0, 0.5), (2.0, 0.25)])
     loaded = load_patches(path)
-    assert loaded == patches
+    assert loaded == patches  # load_patches returns first-class Patches
 
 
 def test_sequence_dataset_learnable_structure():
