@@ -1,6 +1,6 @@
 """§Perf A/B measurements.
 
-Three suites (select with ``--suite {cells,evaluator,operators,all}``):
+Four suites (select with ``--suite {cells,evaluator,operators,kernels,all}``):
 
 * ``cells`` (default) — for each hillclimbed model cell, measures (under the
   FINAL roofline analyzer, so numbers are comparable) the paper-faithful
@@ -21,9 +21,17 @@ Three suites (select with ``--suite {cells,evaluator,operators,all}``):
   per-operator proposed/valid/elite counters, writing
   experiments/perf/operators_ab.json (results quoted in EXPERIMENTS.md).
 
+* ``kernels`` — A/Bs kernel-schedule search on the Pallas kernels
+  (rmsnorm, flash_attention, mamba_scan): a random-schedule baseline vs
+  GEVO-evolved schedules under the same evaluation budget, same
+  schedule-aware roofline fitness; reports best modeled time vs the shipped
+  default schedule, writing experiments/perf/kernels_ab.json (results
+  quoted in EXPERIMENTS.md).
+
   PYTHONPATH=src python -m benchmarks.perf_ab
   PYTHONPATH=src python -m benchmarks.perf_ab --suite evaluator --workers 2
   PYTHONPATH=src python -m benchmarks.perf_ab --suite operators
+  PYTHONPATH=src python -m benchmarks.perf_ab --suite kernels
 """
 
 from __future__ import annotations
@@ -199,6 +207,103 @@ def operators_ab(generations: int = 6) -> dict:
     return out
 
 
+def kernels_ab(generations: int = 6, seed: int = 0) -> dict:
+    """Random-schedule baseline vs GEVO-evolved schedules per Pallas kernel.
+
+    Both arms use the same ``static`` schedule-aware roofline fitness and the
+    same evaluation budget (the random arm draws as many unique genomes as
+    the evolved search executed), so the A/B isolates the search itself.
+    ``best`` arms are the fastest schedule whose numerical error stays within
+    the default schedule's error + 1e-3."""
+    import numpy as np
+
+    from repro.core.evaluator import SerialEvaluator
+    from repro.kernels.workloads import (KERNELS, build_kernel_workload,
+                                         evolve_kernel_schedule)
+
+    out: dict = {"generations": generations, "kernels": {}}
+    for kernel in KERNELS:
+        w = build_kernel_workload(kernel, time_mode="static")
+
+        # distinct patches can decode to the same genome, so the fair budget
+        # for the random arm is unique *genomes* the evolved search executed
+        genomes_seen: set = set()
+        inner_runner = w.runner
+
+        def counting_runner(g, _inner=inner_runner, _seen=genomes_seen):
+            _seen.add(tuple(sorted(g.items())))
+            return _inner(g)
+
+        w.runner = counting_runner
+        ev = SerialEvaluator(w)
+        t0 = time.perf_counter()
+        s, res, best, within_tol = evolve_kernel_schedule(
+            w, generations=generations, seed=seed, evaluator=ev)
+        wall = time.perf_counter() - t0
+        t_def, e_def = res.original_fitness  # the engine's baseline eval
+        tol = e_def + 1e-3
+        if not within_tol:
+            print(f"[kernels_ab] {kernel}: WARNING no evolved schedule "
+                  f"within error tolerance; reporting fastest outright")
+        evolved = {
+            "wall_s": round(wall, 4),
+            "n_evals": ev.n_evals,
+            "n_genomes": len(genomes_seen),
+            "within_tol": within_tol,
+            "cache_hit_rate": round(s.cache.hit_rate, 4),
+            "best_time": best.fitness[0],
+            "best_error": best.fitness[1],
+            "best_schedule": w.space.decode(best.patch.apply(w.program)),
+        }
+
+        rng = np.random.default_rng(seed)
+        t0 = time.perf_counter()
+        rand_best, seen = None, set()
+        budget = min(len(genomes_seen), w.space.size())
+        while len(seen) < budget:
+            g = w.space.random(rng)
+            key = tuple(sorted(g.items()))
+            if key in seen:
+                continue
+            seen.add(key)
+            try:
+                t, e = w.runner(g)
+            except Exception:
+                continue
+            if e <= tol and (rand_best is None or t < rand_best[0]):
+                rand_best = (t, e, g)
+        random_arm = {
+            "wall_s": round(time.perf_counter() - t0, 4),
+            "n_evals": len(seen),
+            "best_time": rand_best[0] if rand_best else None,
+            "best_error": rand_best[1] if rand_best else None,
+            "best_schedule": rand_best[2] if rand_best else None,
+        }
+        ev.close()
+
+        rec = {"default": {"time": t_def, "error": e_def,
+                           "schedule": w.space.decode(w.program)},
+               "evolved": evolved, "random": random_arm,
+               "evolved_vs_default": round(t_def / evolved["best_time"], 3),
+               "evolved_vs_random": (
+                   round(random_arm["best_time"] / evolved["best_time"], 3)
+                   if rand_best else None)}
+        out["kernels"][kernel] = rec
+        rand_txt = (f"{random_arm['best_time']:.3e}s"
+                    if rand_best else "none-within-tol")
+        print(f"[kernels_ab] {kernel}: default={t_def:.3e}s "
+              f"evolved={evolved['best_time']:.3e}s "
+              f"random={rand_txt} "
+              f"speedup_vs_default={rec['evolved_vs_default']}x "
+              f"vs_random={rec['evolved_vs_random']}x")
+
+    os.makedirs(OUT, exist_ok=True)
+    path = os.path.join(OUT, "kernels_ab.json")
+    json.dump(out, open(path, "w"), indent=1)
+    print(f"[kernels_ab] wrote {path}")
+    return out
+
+
 def run_cells():
     os.makedirs(OUT, exist_ok=True)
 
@@ -250,7 +355,8 @@ def run_cells():
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--suite",
-                    choices=("cells", "evaluator", "operators", "all"),
+                    choices=("cells", "evaluator", "operators", "kernels",
+                             "all"),
                     default="cells")
     ap.add_argument("--workers", type=int, default=2,
                     help="ParallelEvaluator workers for --suite evaluator")
@@ -262,6 +368,8 @@ def main():
         evaluator_ab(workers=args.workers, generations=args.generations)
     if args.suite in ("operators", "all"):
         operators_ab(generations=max(args.generations, 6))
+    if args.suite in ("kernels", "all"):
+        kernels_ab(generations=max(args.generations, 6))
 
 
 if __name__ == "__main__":

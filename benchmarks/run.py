@@ -5,6 +5,7 @@
   sec42_crossover_validity  messy-crossover validity rate (~80% in paper)
   sec61_mutation_analysis   key mutations of the best individuals (Sec 6.1/6.2)
   kernels                   Pallas kernel wall time vs jnp oracle (interpret)
+  kernel_schedule_search    GEVO over a kernel's schedule space (attr_tweak)
   roofline_table            per-cell roofline terms from the dry-run records
 
 Prints ``name,us_per_call,derived`` CSV rows (derived carries the
@@ -120,19 +121,20 @@ def bench_mobilenet(full: bool) -> None:
 
 def bench_crossover(full: bool) -> None:
     from repro.core.crossover import messy_crossover
-    from repro.core.interp import evaluate
-    from repro.core.mutation import EditError, apply_patch, random_edit
+    from repro.core.edits import (EditError, OperatorWeights, apply_patch,
+                                  sample_edit)
     from repro.workloads.twofc import build_twofc_step
 
     p = build_twofc_step(batch=8, in_dim=32, hidden=16)
     rng = np.random.default_rng(0)
+    legacy = OperatorWeights.legacy()  # the paper's copy/delete pair
 
     def grow(n):
         edits = []
         while len(edits) < n:
             try:
                 q = apply_patch(p, edits)
-                e = random_edit(q, rng)
+                e = sample_edit(q, rng, legacy)
                 apply_patch(p, edits + [e])
                 edits.append(e)
             except EditError:
@@ -223,6 +225,32 @@ def bench_kernels(full: bool) -> None:
          f"ref_us={timeit(rmsnorm_ref, xx, sc):.1f}")
 
 
+def bench_kernel_schedule_search(full: bool) -> None:
+    """GEVO over the Pallas kernel schedule spaces: evolve (impl, blocks,
+    epilogue) genomes with the attr_tweak operator; headline is the modeled
+    speedup of the best evolved schedule over the kernel's shipped default
+    (error held within 1e-3 of the default's)."""
+    from repro.kernels.workloads import (KERNELS, build_kernel_workload,
+                                         evolve_kernel_schedule)
+
+    gens = 8 if full else 6
+    for kernel in KERNELS:
+        w = build_kernel_workload(kernel, time_mode="static")
+        t_def, _ = w.evaluate(w.program)
+        t0 = time.perf_counter()
+        s, res, best, within_tol = evolve_kernel_schedule(
+            w, generations=gens, seed=0)
+        wall = time.perf_counter() - t0
+        genome = w.space.decode(best.patch.apply(w.program))
+        s.close()
+        _row(f"kernel_search_{kernel}", wall * 1e6,
+             f"default={t_def:.3e}s best={best.fitness[0]:.3e}s "
+             f"speedup={t_def / best.fitness[0]:.2f}x "
+             f"{'' if within_tol else '(OUT OF ERROR TOLERANCE) '}"
+             f"schedule=[{';'.join(f'{k}={v}' for k, v in genome.items())}] "
+             f"evals={s.n_evals} cache_hit={s.cache.hit_rate:.0%}")
+
+
 def bench_roofline_table(full: bool) -> None:
     d = ("experiments/dryrun_final"
          if glob.glob("experiments/dryrun_final/*.json")
@@ -249,6 +277,7 @@ BENCHES = {
     "sec42_crossover": bench_crossover,
     "sec62_mutation_analysis": bench_mutation_analysis,
     "kernels": bench_kernels,
+    "kernel_schedule_search": bench_kernel_schedule_search,
     "roofline_table": bench_roofline_table,
 }
 

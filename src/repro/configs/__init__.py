@@ -24,10 +24,17 @@ ARCHS = (
 
 _MOD = {a: a.replace("-", "_").replace(".", "_") for a in ARCHS}
 
+# CLI-friendly aliases: ids are unambiguous with every separator flattened
+# to "-" ("qwen3-0-6b", "qwen3_0_6b" -> "qwen3-0.6b")
+_ALIASES = {a.replace(".", "-"): a for a in ARCHS}
+
 
 def _load(arch: str):
+    canon = _ALIASES.get(arch.lower().replace("_", "-").replace(".", "-"))
     if arch not in _MOD:
-        raise KeyError(f"unknown arch {arch!r}; choose from {ARCHS}")
+        if canon is None:
+            raise KeyError(f"unknown arch {arch!r}; choose from {ARCHS}")
+        arch = canon
     return importlib.import_module(f"repro.configs.{_MOD[arch]}")
 
 

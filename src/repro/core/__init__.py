@@ -1,20 +1,23 @@
 """The GEVO-ML system: HLO-lite IR, the pluggable edit layer (operator
-registry + Patch algebra), NSGA-II, the generational search loop, and the
-evaluation engine (persistent fitness cache + serial/parallel evaluators).
-See docs/ARCHITECTURE.md for the module map and DESIGN.md for representation
-details."""
+registry + Patch algebra), schedule genomes (kernel-schedule search),
+NSGA-II, the generational search loop, and the evaluation engine (persistent
+fitness cache + serial/parallel evaluators).  See docs/ARCHITECTURE.md for
+the module map and DESIGN.md for representation details."""
 
 from .edits import (Edit, EditError, EditOp, OperatorStats, OperatorWeights,
                     Patch, apply_patch, minimize_patch, register_edit,
                     registered_ops, sample_edit)
 from .evaluator import (EvalOutcome, FitnessCache, ParallelEvaluator,
                         SerialEvaluator, WorkloadSpec, make_evaluator)
+from .fitness import KernelWorkload
+from .schedule import ScheduleError, ScheduleSpace
 from .search import GevoML, Individual, SearchResult, describe_patch
 
 __all__ = [
     "Edit", "EditError", "EditOp", "Patch",
     "register_edit", "registered_ops", "apply_patch", "sample_edit",
     "OperatorWeights", "OperatorStats", "minimize_patch",
+    "ScheduleSpace", "ScheduleError", "KernelWorkload",
     "EvalOutcome", "FitnessCache", "ParallelEvaluator", "SerialEvaluator",
     "WorkloadSpec", "make_evaluator",
     "GevoML", "Individual", "SearchResult", "describe_patch",

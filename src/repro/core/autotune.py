@@ -1,19 +1,22 @@
 """GEVO-Shard: the paper's evolutionary search applied to the DISTRIBUTION
-PLAN of a pod-scale model.
+PLAN of a pod-scale model — now on the shared GEVO engine.
 
-The genome is not IR edits but the per-cell performance knobs (remat policy,
-attention implementation and block size, loss chunking, FSDP on/off,
-microbatching); the fitness is the multi-objective
-``argmin(step_time, device_memory)`` measured on the compiled dry-run's
-three-term roofline — the same NSGA-II machinery as the IR-level search
-(nsga2.py), with elites and one-point-free uniform recombination (genomes
-are fixed-length dicts, so the paper's messy crossover degenerates to
-uniform gene mixing).
+The genome is the per-cell performance knobs (remat policy, attention
+implementation and block size, loss chunking, FSDP on/off, microbatching),
+encoded as a :class:`~repro.core.schedule.ScheduleSpace` program; variation
+is the registered ``attr_tweak`` operator (one gene per edit, exactly the
+old mutate semantics) plus the search loop's messy crossover over patches;
+selection is :class:`~repro.core.search.GevoML`'s NSGA-II on
+``argmin(step_time, device_memory)``; evaluation flows through a
+:class:`~repro.core.evaluator.SerialEvaluator` with the content-addressed
+:class:`~repro.core.evaluator.FitnessCache` (optionally persistent via
+``--cache``), with a genome-level memo on top so each unique plan compiles
+exactly once.  Fitness is the compiled dry-run's three-term roofline — one
+XLA compile per plan instead of the paper's 48 GPU-hours of retraining.
 
-This is how the paper's technique becomes a first-class feature of the
-multi-pod framework: fitness evaluations that took 48 GPU-hours of model
-retraining in the paper cost one XLA compile here, so the search is
-practical per (arch x shape) cell.  Used by the §Perf hillclimbs.
+``GENOME_SPACE`` / ``genome_keys`` / ``default_genome`` / ``apply_genome``
+semantics and the CLI are unchanged; results additionally report evaluator
+cache stats and per-operator search stats.
 
 CLI:  PYTHONPATH=src python -m repro.core.autotune --arch qwen2-vl-72b \
           --shape train_4k --generations 4 --pop 6
@@ -24,12 +27,13 @@ from __future__ import annotations
 import argparse
 import json
 import os
-import sys
 import time
 
 import numpy as np
 
-from .nsga2 import pareto_front, rank_population, select_elites, tournament
+from .evaluator import FitnessCache, SerialEvaluator
+from .fitness import InvalidVariant, KernelWorkload
+from .schedule import ScheduleSpace
 
 GENOME_SPACE: dict[str, list] = {
     "remat": ["none", "full"],
@@ -64,9 +68,10 @@ def apply_genome(cfg, genome: dict):
 
 
 class GevoShard:
-    def __init__(self, arch: str, shape: str, *, multi_pod: bool = False,
-                 pop_size: int = 6, n_elite: int = 3, seed: int = 0,
-                 verbose: bool = True):
+    def __init__(self, arch: str, shape: str = "train_4k", *,
+                 multi_pod: bool = False, pop_size: int = 6,
+                 n_elite: int = 3, seed: int = 0, verbose: bool = True,
+                 cache_path: str | None = None):
         from ..configs import SHAPES, get_config  # late: needs XLA_FLAGS set
         self.arch, self.shape, self.multi_pod = arch, shape, multi_pod
         self.cfg = get_config(arch)
@@ -74,36 +79,54 @@ class GevoShard:
         self.keys = genome_keys(self.kind)
         self.pop_size = pop_size
         self.n_elite = min(n_elite, pop_size)
+        self.seed = seed
         self.rng = np.random.default_rng(seed)
         self.verbose = verbose
-        self._cache: dict[tuple, tuple] = {}
+        self.cache_path = cache_path
         self.records: list[dict] = []
+        self._genome_fits: dict[tuple, tuple | None] = {}
+        self.space = ScheduleSpace.of(
+            f"gevo-shard/{arch}/{shape}/{'2pod' if multi_pod else '1pod'}",
+            {k: tuple(GENOME_SPACE[k]) for k in self.keys})
+        self.base = default_genome(self.cfg, self.kind)
+        self.workload = KernelWorkload(
+            name=f"gevo-shard/{arch}/{shape}",
+            program=self.space.encode(self.base),
+            space=self.space,
+            runner=self.evaluate,
+            time_mode="static",  # roofline fitness: deterministic per plan
+            kind="shard")
 
-    # -- fitness: one XLA compile + roofline -------------------------------
+    # -- fitness: one XLA compile + roofline per unique plan ----------------
     def evaluate(self, genome: dict) -> tuple[float, float]:
         key = tuple(genome[k] for k in self.keys)
-        if key in self._cache:
-            return self._cache[key]
+        if key in self._genome_fits:
+            fit = self._genome_fits[key]
+            if fit is None:
+                raise InvalidVariant(f"plan {genome} failed to compile")
+            return fit
         from ..launch.dryrun import run_cell
         cfg2, micro = apply_genome(self.cfg, genome)
         rec = run_cell(self.arch, self.shape, self.multi_pod,
                        cfg_override=cfg2, microbatches=micro)
-        if rec["status"] != "ok":
-            fit = (float("inf"), float("inf"))
-        else:
-            step_s = rec["roofline"]["step_s"]
-            mem = rec["memory"].get("temp_size_in_bytes", 0) / 1e9
-            fit = (step_s, mem)
-        self._cache[key] = fit
-        self.records.append({"genome": dict(genome), "fitness": fit,
+        self.records.append({"genome": dict(genome),
                              "rec": {k: rec.get(k) for k in
                                      ("status", "compile_s", "roofline")}})
+        if rec["status"] != "ok":
+            self._genome_fits[key] = None
+            raise InvalidVariant(
+                f"plan {genome} failed to compile: {rec.get('error')}")
+        fit = (rec["roofline"]["step_s"],
+               rec["memory"].get("temp_size_in_bytes", 0) / 1e9)
+        self._genome_fits[key] = fit
+        self.records[-1]["fitness"] = fit
         if self.verbose:
             print(f"  eval {genome} -> step={fit[0]:.3f}s mem={fit[1]:.1f}GB",
                   flush=True)
         return fit
 
-    # -- variation ----------------------------------------------------------
+    # -- genome-level variation (kept for unit tests / external callers; ----
+    # -- the search loop now varies Patches through the attr_tweak operator) -
     def _mutate(self, genome: dict) -> dict:
         g = dict(genome)
         k = self.keys[int(self.rng.integers(len(self.keys)))]
@@ -115,50 +138,62 @@ class GevoShard:
         return {k: (a[k] if self.rng.random() < 0.5 else b[k])
                 for k in self.keys}
 
+    # -- the search: shared NSGA-II + evaluator engine ----------------------
     def run(self, generations: int = 4):
-        base = default_genome(self.cfg, self.kind)
-        pop = [base] + [self._mutate(base) for _ in range(self.pop_size - 1)]
-        fits = [self.evaluate(g) for g in pop]
-        for gen in range(generations):
-            objs = np.array(fits)
-            rank, crowd = rank_population(objs)
-            elites_idx = select_elites(objs, self.n_elite)
-            children = []
-            while len(children) < self.pop_size - len(elites_idx):
-                a = pop[tournament(self.rng, rank, crowd)]
-                b = pop[tournament(self.rng, rank, crowd)]
-                child = self._mutate(self._crossover(a, b))
-                children.append(child)
-            pop = [pop[i] for i in elites_idx] + children
-            fits = [self.evaluate(g) for g in pop]
-            if self.verbose:
-                best = min(fits)[0]
-                print(f"[gen {gen}] best step_s={best:.3f}", flush=True)
-        objs = np.array(fits)
-        pf = pareto_front(objs)
-        base_fit = self._cache[tuple(base[k] for k in self.keys)]
-        return {
-            "arch": self.arch, "shape": self.shape,
-            "baseline": {"genome": base, "fitness": base_fit},
-            "pareto": [{"genome": pop[i], "fitness": fits[i]} for i in pf],
-            "best_step": min((fits[i] for i in pf), key=lambda f: f[0]),
-            "n_compiles": len(self._cache),
-        }
+        from .search import GevoML
+        # the with-block owns the evaluator (GevoML.close is a no-op for a
+        # caller-provided one), so a persistent cache handle never leaks
+        with SerialEvaluator(self.workload,
+                             cache=FitnessCache(self.cache_path)) as ev:
+            # mutation_rate=1.0 preserves the pre-engine loop's semantics
+            # (every offspring was crossover + exactly one gene mutation)
+            s = GevoML(self.workload, pop_size=self.pop_size,
+                       n_elite=self.n_elite, init_mutations=1,
+                       mutation_rate=1.0, operators={"attr_tweak": 1.0},
+                       seed=self.seed, evaluator=ev,
+                       verbose=self.verbose)
+            res = s.run(generations=generations)
+            decode = lambda ind: self.space.decode(  # noqa: E731
+                ind.patch.apply(self.workload.program))
+            # the engine's population holds only >=1-edit variants; fold the
+            # baseline plan back into the front (the pre-engine loop seeded
+            # the population with it)
+            from .nsga2 import pareto_front
+            cand = ([(self.base, tuple(res.original_fitness), "<original>")]
+                    + [(decode(i), i.fitness, i.patch.describe())
+                       for i in res.pareto])
+            keep = pareto_front(np.array([c[1] for c in cand]))
+            pareto = [{"genome": cand[i][0], "fitness": list(cand[i][1]),
+                       "patch": cand[i][2]} for i in sorted(keep)]
+            return {
+                "arch": self.arch, "shape": self.shape,
+                "baseline": {"genome": self.base,
+                             "fitness": list(res.original_fitness)},
+                "pareto": pareto,
+                "best_step": min((tuple(p["fitness"]) for p in pareto),
+                                 key=lambda f: f[0]),
+                "n_compiles": len(self._genome_fits),
+                "evaluator": s.evaluator.stats(),
+                "operators": res.operator_stats(),
+            }
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
-    ap.add_argument("--shape", required=True)
+    ap.add_argument("--shape", default="train_4k")
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--pop", type=int, default=6)
     ap.add_argument("--generations", type=int, default=3)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--cache", default=None,
+                    help="persistent fitness-cache path (JSONL); rerun with "
+                         "the same path to re-measure nothing")
     ap.add_argument("--out", default=None)
     args = ap.parse_args()
     t0 = time.time()
     s = GevoShard(args.arch, args.shape, multi_pod=args.multi_pod,
-                  pop_size=args.pop, seed=args.seed)
+                  pop_size=args.pop, seed=args.seed, cache_path=args.cache)
     res = s.run(args.generations)
     res["wall_s"] = round(time.time() - t0, 1)
     res["records"] = s.records

@@ -13,8 +13,10 @@ Public surface (re-exported from :mod:`repro.core`):
 * :func:`resize_value` — the paper's tensor-resize repair (shared by all
   operators; useful to custom ones too).
 
-Importing this package registers the five built-in operators:
-``delete``, ``copy``, ``swap``, ``insert``, ``const_perturb``.
+Importing this package registers the six built-in operators:
+``delete``, ``copy``, ``swap``, ``insert``, ``const_perturb``, and
+``attr_tweak`` (the schedule-knob operator backing kernel-schedule search;
+inert on programs without knob constants).
 """
 
 from .base import (Edit, EditError, EditOp, describe_edit, edit_from_doc,
@@ -27,6 +29,7 @@ from .sampling import OperatorWeights, sample_edit
 from .stats import OperatorStats
 
 from . import ops as _builtin_ops  # noqa: F401  (registers the built-ins)
+from . import schedule_ops as _schedule_ops  # noqa: F401  (attr_tweak)
 
 __all__ = [
     "Edit", "EditError", "EditOp", "Patch",

@@ -67,9 +67,16 @@ class EditOp:
       never any other exception; given the same program and the same
       ``(edit, rng-from-seed)`` it must produce the same result;
     * docs round-trip bit-identically: ``from_doc(to_doc(e)) == e``.
+
+    ``universal`` marks operators applicable to arbitrary IR programs; set
+    it False for representation-specific operators (e.g. ``attr_tweak``
+    targets schedule-knob constants only) so the default
+    ``OperatorWeights.all_registered()`` mix skips them — searches over the
+    matching representation request them explicitly.
     """
 
     name: str = "?"
+    universal: bool = True
 
     def propose(self, prog: Program, rng: np.random.Generator) -> Edit:
         raise NotImplementedError

@@ -58,8 +58,12 @@ class OperatorWeights:
 
     @staticmethod
     def all_registered() -> "OperatorWeights":
-        """Uniform over every registered operator (the search default)."""
-        return OperatorWeights(tuple((n, 1.0) for n in registered_ops()))
+        """Uniform over every *universal* registered operator (the search
+        default).  Representation-specific operators (``EditOp.universal =
+        False``, e.g. ``attr_tweak``) are excluded — name them explicitly
+        to search the representation they target."""
+        return OperatorWeights(tuple((n, 1.0) for n in registered_ops()
+                                     if get_edit_op(n).universal))
 
     @staticmethod
     def parse(spec: str) -> "OperatorWeights":

@@ -22,6 +22,7 @@ import numpy as np
 
 from .interp import evaluate, jit_program
 from .ir import Program, op_bytes, op_flops
+from .schedule import ScheduleSpace
 
 # TPU v5e target constants (also used by the roofline harness).
 PEAK_FLOPS = 197e12      # bf16 FLOP/s per chip
@@ -103,6 +104,42 @@ class PredictionWorkload:
         except InvalidVariant:
             raise
         except Exception as e:  # any execution failure invalidates the variant
+            raise InvalidVariant(str(e)) from e
+
+
+@dataclass
+class KernelWorkload:
+    """Kernel-schedule task: ``program`` is a schedule genome encoded as
+    HLO-lite constant ops (:mod:`repro.core.schedule`), and fitness is
+    ``argmin(kernel time, max numerical error vs the kernel's reference)``.
+
+    ``runner(genome)`` executes the scheduled kernel (so un-launchable or
+    crashing configurations surface as :class:`InvalidVariant`, the paper's
+    execute-successfully gate) and returns ``(time_s, max_abs_error)`` —
+    time measured on this host in ``measured`` mode, or a deterministic
+    schedule-aware roofline estimate in ``static`` mode (see
+    ``repro.kernels.costs``).  Builders for the Pallas kernels live in
+    ``repro.kernels.workloads``; GEVO-Shard (:mod:`repro.core.autotune`)
+    builds one whose runner compiles a whole model cell."""
+
+    name: str
+    program: Program                 # the encoded schedule genome
+    space: ScheduleSpace
+    runner: Callable[[dict], tuple[float, float]]  # genome -> (time, err)
+    time_mode: str = "static"
+    kind: str = "kernel"
+    # rebuild recipe for ParallelEvaluator workers (see core/evaluator.py);
+    # required for parallel eval: runner is a closure and does not pickle
+    spec: object | None = None
+
+    def evaluate(self, program: Program) -> tuple[float, float]:
+        try:
+            genome = self.space.decode(program)
+            t, err = self.runner(genome)
+            return _check_finite_scalar(t), _check_finite_scalar(err)
+        except InvalidVariant:
+            raise
+        except Exception as e:  # ScheduleError, launch failure, numerics
             raise InvalidVariant(str(e)) from e
 
 

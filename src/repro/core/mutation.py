@@ -11,11 +11,17 @@ pre-registry callers keep working and will be removed in a future PR.
 
 from __future__ import annotations
 
+import warnings
+
 import numpy as np
 
 from .edits import (Edit, EditError, Patch, apply_edit,  # noqa: F401
                     apply_patch, resize_value)
 from .edits.sampling import OperatorWeights, sample_edit
+
+warnings.warn(
+    "repro.core.mutation is deprecated; import from repro.core.edits "
+    "(re-exported by repro.core)", DeprecationWarning, stacklevel=2)
 
 __all__ = ["Edit", "EditError", "Patch", "apply_edit", "apply_patch",
            "resize_value", "random_edit"]

@@ -1,0 +1,123 @@
+"""Schedule-aware roofline cost model for the Pallas kernels.
+
+``static`` fitness mode needs a deterministic time estimate that actually
+*moves* with the schedule genome — wall-clock of interpret-mode kernels on a
+CPU host says nothing about TPU schedules.  This model extends the per-op
+roofline in ``core/fitness.py`` with the three schedule-visible effects on a
+TPU v5e:
+
+* **HBM traffic under the BlockSpec** — e.g. flash attention re-fetches the
+  K/V tiles once per *query block*, so ``block_q`` divides the dominant
+  traffic term; the fused rmsnorm saves the normalized intermediate's
+  round-trip, and an ``unfused`` epilogue puts one back.
+* **Grid overhead** — the TPU grid is sequential; each step pays DMA issue /
+  revisiting bookkeeping (``GRID_STEP_S``), so tiny blocks lose.
+* **Hardware tiling** — MXU matmuls pad to (8-sublane, 128-lane) tiles and
+  the VPU runs elementwise work at ~PEAK/8, so sub-128 blocks waste lanes.
+
+Configurations whose VMEM working set exceeds the chip (16 MB) would not
+launch; they raise :class:`~repro.core.fitness.InvalidVariant` — the paper's
+execute-successfully gate, not an objective.  Causal masking is charged at
+full cost: the kernels mask with ``where`` and do not skip dead blocks.
+"""
+
+from __future__ import annotations
+
+from ..core.fitness import HBM_BW, PEAK_FLOPS, InvalidVariant
+
+VMEM_BYTES = 16 * 2 ** 20   # per-core VMEM
+VPU_FLOPS = PEAK_FLOPS / 8  # elementwise throughput vs MXU peak
+GRID_STEP_S = 2e-7          # sequential per-grid-step bookkeeping
+SEQ_STEP_S = 5e-8           # per-timestep latency of an in-kernel scan
+
+
+def _pad(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+def _vmem_check(name: str, used: int) -> None:
+    if used > VMEM_BYTES:
+        raise InvalidVariant(
+            f"{name}: VMEM working set {used / 2**20:.1f} MB exceeds "
+            f"{VMEM_BYTES / 2**20:.0f} MB — config would not launch")
+
+
+def _block_check(name: str, dim: int, block: int) -> None:
+    if dim % min(block, dim) != 0:
+        raise InvalidVariant(
+            f"{name}: block {block} does not divide dim {dim}")
+
+
+def rmsnorm_time(genome: dict, *, rows: int, d: int) -> float:
+    """(rows, d) f32 rows normalized; ``ref`` pays the unfused intermediate
+    round-trips, ``pallas`` streams each row block once."""
+    if genome["impl"] == "ref":
+        traffic = 4 * (3 * rows * d + 2 * rows + 2 * d)
+        return max(4 * rows * d / VPU_FLOPS, traffic / HBM_BW)
+    block = min(genome["block_rows"], rows)
+    _block_check("rmsnorm", rows, block)
+    _vmem_check("rmsnorm", 4 * (2 * block * d + d))
+    traffic = 4 * (2 * rows * d + d)
+    if genome["epilogue"] == "unfused":
+        traffic += 4 * (2 * rows * d + d)  # y round-trips for the scale mul
+    steps = rows // block
+    return (max(4 * rows * d / VPU_FLOPS, traffic / HBM_BW)
+            + steps * GRID_STEP_S)
+
+
+def flash_attention_time(genome: dict, *, B: int, H: int, S: int,
+                         hd: int) -> float:
+    """(B, H, S, hd) f32 self-attention.  ``ref`` materializes the S x S
+    scores in HBM; ``pallas`` streams K/V tiles, re-fetching them once per
+    query block."""
+    if genome["impl"] == "ref":
+        flops = B * H * (4 * S * S * hd + 5 * S * S)
+        traffic = 4 * B * H * (4 * S * hd + 4 * S * S)
+        return max(flops / PEAK_FLOPS, traffic / HBM_BW)
+    bq = min(genome["block_q"], S)
+    bk = min(genome["block_k"], S)
+    _block_check("flash_attention q", S, bq)
+    _block_check("flash_attention k", S, bk)
+    _vmem_check("flash_attention",
+                4 * (bq * hd + 2 * bk * hd)            # q/k/v tiles (f32)
+                + 4 * (bq * bk + bq * hd + 2 * bq))    # scores + scratch
+    n_q, n_k = S // bq, S // bk
+    pairs = B * H * n_q * n_k
+    # MXU pads each matmul to (8, 128) output tiles; contraction unpadded.
+    mxu = pairs * 2 * _pad(bq, 8) * (_pad(bk, 128) * hd + _pad(hd, 128) * bk)
+    vpu = pairs * 5 * bq * bk                           # softmax bookkeeping
+    traffic = 4 * (B * H * 2 * S * hd                   # q in, out
+                   + pairs * 2 * bk * hd)               # k/v per (q, k) pair
+    return (max(mxu / PEAK_FLOPS, vpu / VPU_FLOPS, traffic / HBM_BW)
+            + pairs * GRID_STEP_S)
+
+
+def mamba_scan_time(genome: dict, *, Bt: int, L: int, D: int,
+                    N: int) -> float:
+    """(Bt, L, D) selective scan with state (D, N).  ``ref`` materializes
+    the (Bt, L, D, N) decay/drive tensors in HBM; ``pallas`` keeps the state
+    in VMEM scratch across sequence chunks."""
+    elems = Bt * L * D * N
+    if genome["impl"] == "ref":
+        traffic = 4 * (4 * elems + 3 * Bt * L * D + 2 * Bt * L * N + D * N)
+        return max(6 * elems / VPU_FLOPS, traffic / HBM_BW) + L * SEQ_STEP_S
+    chunk = min(genome["chunk"], L)
+    _block_check("mamba_scan", L, chunk)
+    _vmem_check("mamba_scan", 4 * (3 * chunk * D + 2 * chunk * N + D * N))
+    traffic = 4 * (3 * Bt * L * D + 2 * Bt * L * N + D * N)
+    steps = Bt * (L // chunk)
+    return (max(6 * elems / VPU_FLOPS, traffic / HBM_BW)
+            + steps * GRID_STEP_S + L * SEQ_STEP_S)
+
+
+_MODELS = {
+    "rmsnorm": rmsnorm_time,
+    "flash_attention": flash_attention_time,
+    "mamba_scan": mamba_scan_time,
+}
+
+
+def schedule_time(kernel: str, genome: dict, **shape) -> float:
+    """Deterministic roofline-lite time of ``kernel`` under ``genome`` on the
+    given shape; raises :class:`InvalidVariant` for un-launchable configs."""
+    return _MODELS[kernel](genome, **shape)

@@ -1,0 +1,197 @@
+"""Kernel-schedule workload builders: the Pallas kernels as GEVO scenarios.
+
+Each builder wires one kernel (``rmsnorm`` / ``flash_attention`` /
+``mamba_scan``) into a :class:`~repro.core.fitness.KernelWorkload` whose
+genome is a :class:`~repro.core.schedule.ScheduleSpace` over the kernel's
+schedule knobs — implementation choice (``ref`` oracle vs ``pallas``), block
+sizes / chunking (grid shape is the derived ``dim // block``), and for
+rmsnorm the epilogue-fusion choice (``unfused`` applies the scale multiply
+as a separate jnp op after the kernel, costing one extra HBM round-trip in
+the model and exercising fusion as a searchable knob).
+
+Fitness = ``(time, max |out - ref|)``:
+
+* the kernel is always *executed* on fixed seeded inputs (interpret mode on
+  CPU hosts) — un-launchable configs fail here, and the error objective is
+  the real numerical gap against the kernel's ``ref.py`` oracle;
+* time is the schedule-aware roofline (``repro.kernels.costs``) in
+  ``static`` mode (deterministic: CI-reproducible, parallel == serial), or
+  median wall-clock of the jitted variant in ``measured`` mode.
+
+Builders are deterministic given their kwargs and attach a
+:class:`~repro.core.evaluator.WorkloadSpec`, so ParallelEvaluator workers
+rebuild them (the runner closure does not pickle).  Test shapes are chosen
+so every block choice divides its dimension — every genome in the space is
+launchable (property-tested in ``tests/test_kernel_search.py``).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.evaluator import WorkloadSpec
+from ..core.fitness import InvalidVariant, KernelWorkload, measured_time
+from ..core.schedule import ScheduleSpace
+from .costs import schedule_time
+from .flash_attention.ops import flash_attention
+from .flash_attention.ref import attention_ref
+from .mamba_scan.ops import mamba_scan
+from .mamba_scan.ref import mamba_scan_ref
+from .rmsnorm.ops import rmsnorm
+from .rmsnorm.ref import rmsnorm_ref
+
+KERNELS = ("rmsnorm", "flash_attention", "mamba_scan")
+
+# Evaluation shapes: small enough for interpret-mode execution, and every
+# block choice below divides its dimension (launchability by construction).
+SHAPES: dict[str, dict[str, int]] = {
+    "rmsnorm": {"rows": 512, "d": 512},
+    "flash_attention": {"B": 1, "H": 2, "S": 256, "hd": 64},
+    "mamba_scan": {"Bt": 1, "L": 128, "D": 32, "N": 16},
+}
+
+_SPACES: dict[str, dict[str, tuple]] = {
+    "rmsnorm": {"impl": ("pallas", "ref"),
+                "block_rows": (32, 64, 128, 256, 512),
+                "epilogue": ("fused", "unfused")},
+    "flash_attention": {"impl": ("pallas", "ref"),
+                        "block_q": (32, 64, 128, 256),
+                        "block_k": (32, 64, 128, 256)},
+    "mamba_scan": {"impl": ("pallas", "ref"),
+                   "chunk": (8, 16, 32, 64, 128)},
+}
+
+# The kernels' shipped defaults — the search baseline (empty patch).
+BASELINES: dict[str, dict] = {
+    "rmsnorm": {"impl": "pallas", "block_rows": 128, "epilogue": "fused"},
+    "flash_attention": {"impl": "pallas", "block_q": 128, "block_k": 128},
+    "mamba_scan": {"impl": "pallas", "chunk": 64},
+}
+
+
+# which evaluation-shape dimension each block-size knob must divide
+BLOCK_DIMS = {"block_rows": "rows", "block_q": "S", "block_k": "S",
+              "chunk": "L"}
+
+
+def kernel_space(kernel: str) -> ScheduleSpace:
+    if kernel not in _SPACES:
+        raise KeyError(f"unknown kernel {kernel!r}; choose from {KERNELS}")
+    return ScheduleSpace.of(f"kernel/{kernel}", _SPACES[kernel])
+
+
+def _inputs(kernel: str, seed: int):
+    k = jax.random.PRNGKey
+    if kernel == "rmsnorm":
+        s = SHAPES[kernel]
+        return {"x": jax.random.normal(k(seed), (s["rows"], s["d"])),
+                "scale": jax.random.normal(k(seed + 1), (s["d"],))}
+    if kernel == "flash_attention":
+        s = SHAPES[kernel]
+        shape = (s["B"], s["H"], s["S"], s["hd"])
+        return {"q": jax.random.normal(k(seed), shape),
+                "k": jax.random.normal(k(seed + 1), shape),
+                "v": jax.random.normal(k(seed + 2), shape)}
+    s = SHAPES["mamba_scan"]
+    return {"dt": jax.nn.softplus(
+                jax.random.normal(k(seed), (s["Bt"], s["L"], s["D"]))),
+            "x": jax.random.normal(k(seed + 1), (s["Bt"], s["L"], s["D"])),
+            "A": -jnp.exp(jax.random.normal(
+                k(seed + 2), (s["D"], s["N"])) * 0.3),
+            "B": jax.random.normal(k(seed + 3), (s["Bt"], s["L"], s["N"])),
+            "C": jax.random.normal(k(seed + 4), (s["Bt"], s["L"], s["N"]))}
+
+
+def _variant_fn(kernel: str, genome: dict):
+    """The scheduled computation as ``fn(inputs_dict) -> output``."""
+    if kernel == "rmsnorm":
+        if genome["impl"] == "ref":
+            return lambda i: rmsnorm_ref(i["x"], i["scale"])
+        br = genome["block_rows"]
+        if genome["epilogue"] == "fused":
+            return lambda i: rmsnorm(i["x"], i["scale"], block_rows=br)
+        ones = jnp.ones(SHAPES["rmsnorm"]["d"], jnp.float32)
+        return lambda i: rmsnorm(i["x"], ones, block_rows=br) * i["scale"]
+    if kernel == "flash_attention":
+        if genome["impl"] == "ref":
+            return lambda i: attention_ref(i["q"], i["k"], i["v"],
+                                           causal=True)
+        bq, bk = genome["block_q"], genome["block_k"]
+        return lambda i: flash_attention(i["q"], i["k"], i["v"], causal=True,
+                                         block_q=bq, block_k=bk)
+    if genome["impl"] == "ref":
+        return lambda i: mamba_scan_ref(i["dt"], i["x"], i["A"], i["B"],
+                                        i["C"])
+    ch = genome["chunk"]
+    return lambda i: mamba_scan(i["dt"], i["x"], i["A"], i["B"], i["C"],
+                                chunk=ch)
+
+
+def _ref_output(kernel: str, inputs):
+    return np.asarray(_variant_fn(kernel, {"impl": "ref"})(inputs),
+                      np.float32)
+
+
+def build_kernel_workload(kernel: str = "rmsnorm", *,
+                          time_mode: str = "static",
+                          seed: int = 0) -> KernelWorkload:
+    """One Pallas kernel as a GEVO scenario: schedule genome + (time, error)
+    fitness.  Deterministic given kwargs (required by WorkloadSpec)."""
+    space = kernel_space(kernel)
+    shape = SHAPES[kernel]
+    inputs = _inputs(kernel, seed)
+    ref_out = _ref_output(kernel, inputs)
+
+    def runner(genome: dict) -> tuple[float, float]:
+        t = schedule_time(kernel, genome, **shape)  # validates launchability
+        fn = _variant_fn(kernel, genome)
+        try:
+            out = fn(inputs)
+        except Exception as e:
+            raise InvalidVariant(f"{kernel} failed to launch: {e}") from e
+        err = float(np.max(np.abs(np.asarray(out, np.float32) - ref_out)))
+        if time_mode == "measured":
+            # jit the whole variant: the ref/epilogue paths are plain jnp
+            # (eager per-op dispatch would drown the schedule signal)
+            t = measured_time(jax.jit(fn), inputs)
+        return t, err
+
+    return KernelWorkload(
+        name=f"kernel/{kernel}",
+        program=space.encode(BASELINES[kernel]),
+        space=space,
+        runner=runner,
+        time_mode=time_mode,
+        spec=WorkloadSpec.make(
+            "repro.kernels.workloads:build_kernel_workload",
+            kernel=kernel, time_mode=time_mode, seed=seed),
+    )
+
+
+def evolve_kernel_schedule(workload, *, generations: int = 6,
+                           pop_size: int = 10, seed: int = 0,
+                           evaluator=None, verbose: bool = False,
+                           err_tol: float = 1e-3):
+    """The canonical kernel-schedule search configuration, shared by the
+    example, the benchmarks, and the A/B suite: NSGA-II over ``attr_tweak``
+    patches (schedule genomes are a handful of genes, so a high mutation
+    rate and a 2-tweak init drive the search; crossover recombines tweaks).
+
+    Returns ``(search, result, best, within_tol)`` where ``best`` is the
+    fastest Pareto member whose error stays within the default schedule's
+    error + ``err_tol`` — or, when nothing meets the gate
+    (``within_tol=False``), the fastest member outright.  The caller owns
+    ``evaluator`` (or, when None, the search's internal one — closed by
+    ``search.close()``)."""
+    from ..core.search import GevoML
+    s = GevoML(workload, pop_size=pop_size, n_elite=pop_size // 2,
+               seed=seed, init_mutations=2, mutation_rate=0.9,
+               operators={"attr_tweak": 1.0}, evaluator=evaluator,
+               verbose=verbose)
+    res = s.run(generations=generations)
+    _, e_def = res.original_fitness
+    ok = [i for i in res.pareto if i.fitness[1] <= e_def + err_tol]
+    best = min(ok or res.pareto, key=lambda i: i.fitness[0])
+    return s, res, best, bool(ok)

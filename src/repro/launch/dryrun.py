@@ -57,6 +57,8 @@ def run_cell(arch: str, shape: str, multi_pod: bool,
         rec["compile_s"] = round(t2 - t1, 2)
         rec["memory"] = _memory_stats(compiled)
         ca = compiled.cost_analysis() or {}
+        if isinstance(ca, (list, tuple)):  # newer jax returns [dict]
+            ca = ca[0] if ca else {}
         rec["xla_cost"] = {"flops": ca.get("flops"),
                            "bytes": ca.get("bytes accessed")}
         text = compiled.as_text()

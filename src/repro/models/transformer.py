@@ -30,7 +30,7 @@ from jax.sharding import PartitionSpec as P
 
 from .attention import (gqa_decode, gqa_forward, init_attn, mla_decode,
                         mla_forward)
-from .common import ModelConfig
+from .common import ModelConfig, shard_map
 from .layers import dense_init, rms_norm, softmax_cross_entropy, swiglu
 from .mamba import (init_mamba, mamba1_decode, mamba1_seq, mamba2_decode,
                     mamba2_seq)
@@ -129,7 +129,7 @@ def _moe_apply(p, cfg: ModelConfig, x, dist: Dist, decoding: bool):
                                       expert_axis=dist.model_axis)
                 return y.reshape(bl, sl, d)
 
-            fn = jax.shard_map(
+            fn = shard_map(
                 local_dec, mesh=dist.mesh,
                 in_specs=(P(dist.batch_axes, None, None), pspec),
                 out_specs=P(dist.batch_axes, None, None), check_vma=False)
@@ -146,7 +146,7 @@ def _moe_apply(p, cfg: ModelConfig, x, dist: Dist, decoding: bool):
                            expert_axis=dist.model_axis)
             return y.reshape(bl, sl, d)
 
-        fn = jax.shard_map(
+        fn = shard_map(
             local_moe, mesh=dist.mesh,
             in_specs=(P(dist.batch_axes, dist.model_axis, None), pspec),
             out_specs=P(dist.batch_axes, dist.model_axis, None),

@@ -1,11 +1,18 @@
 """Multi-device behaviours, run in subprocesses so the main pytest process
-keeps the default single-device view (smoke tests must see 1 device)."""
+keeps the default single-device view (smoke tests must see 1 device).
+
+Each test pays a full subprocess JAX+XLA startup and multi-device compile
+(~10 minutes for the module), so the whole module is tier-2 ``slow``: the
+default run (pyproject ``addopts``) deselects it; run ``pytest -m slow``
+(CI's non-blocking slow job) to include it."""
 
 import subprocess
 import sys
 import textwrap
 
 import pytest
+
+pytestmark = pytest.mark.slow
 
 
 def _run(code: str, devices: int = 8):
@@ -33,7 +40,8 @@ def test_moe_ep_a2a_matches_dense_oracle():
         x = jax.random.normal(jax.random.PRNGKey(1), (2, 8, 32))
         y_ref = moe_dense(p, cfg, x)
         mesh = Mesh(np.array(jax.devices()).reshape(4), ("model",))
-        fm = jax.shard_map(
+        from repro.models.common import shard_map
+        fm = shard_map(
             lambda xb, pp: moe_ep_a2a(pp, cfg, xb, capacity_factor=8.0),
             mesh=mesh,
             in_specs=(P("model"), {"router": P(), "w_gate": P("model"),
@@ -66,7 +74,8 @@ def test_moe_ep_a2a_decode_matches_dense_oracle():
         pspecs = {"router": P(), "w_gate": P("model"), "w_up": P("model"),
                   "w_down": P("model"), "sh_gate": P(), "sh_up": P(),
                   "sh_down": P()}
-        fm = jax.shard_map(
+        from repro.models.common import shard_map
+        fm = shard_map(
             lambda xb, pp: moe_ep_a2a_decode(pp, cfg, xb,
                                              capacity_factor=8.0),
             mesh=mesh, in_specs=(P(), pspecs), out_specs=P(),
@@ -207,8 +216,9 @@ def test_hlo_analysis_calibration():
         assert c.flops == 10 * 2 * 64**3, c.flops
         # psum wire bytes: ring all-reduce 2*(g-1)/g * payload
         mesh = jax.make_mesh((8,), ("d",))
-        f = jax.shard_map(lambda v: jax.lax.psum(v, "d"), mesh=mesh,
-                          in_specs=P("d"), out_specs=P())
+        from repro.models.common import shard_map
+        f = shard_map(lambda v: jax.lax.psum(v, "d"), mesh=mesh,
+                      in_specs=P("d"), out_specs=P())
         xs = jax.ShapeDtypeStruct((8, 1024), jnp.float32)
         txt = jax.jit(f).lower(xs).compile().as_text()
         c = analyze(txt, 8)

@@ -16,7 +16,8 @@ from repro.core.evaluator import SerialEvaluator
 from repro.core.search import GevoML
 from repro.workloads.twofc import build_twofc_step, build_twofc_training_workload
 
-BUILTINS = ("const_perturb", "copy", "delete", "insert", "swap")
+BUILTINS = ("attr_tweak", "const_perturb", "copy", "delete", "insert",
+            "swap")
 
 
 def _base_program():
@@ -73,9 +74,11 @@ def test_parallel_payload_ships_operator_modules(tiny_workload):
     from repro.core.edits import operator_modules
     from repro.core.evaluator import ParallelEvaluator
 
-    assert operator_modules() == ("repro.core.edits.ops",)
+    assert operator_modules() == ("repro.core.edits.ops",
+                                  "repro.core.edits.schedule_ops")
     ev = ParallelEvaluator(tiny_workload, n_workers=2)
-    assert ev._payload()["edit_modules"] == ("repro.core.edits.ops",)
+    assert ev._payload()["edit_modules"] == ("repro.core.edits.ops",
+                                             "repro.core.edits.schedule_ops")
     ev.close()
 
     @register_edit("test_main_op")
@@ -187,7 +190,13 @@ def test_messy_crossover_empty_pool_degenerate():
 
 def test_operator_weights_parse_and_validate():
     assert OperatorWeights.parse("legacy").names() == ("copy", "delete")
-    assert OperatorWeights.parse("all").names() == registered_ops()
+    # "all" spreads over universal operators; attr_tweak (schedule-only,
+    # universal=False) must be requested by name
+    universal = tuple(n for n in registered_ops()
+                      if get_edit_op(n).universal)
+    assert OperatorWeights.parse("all").names() == universal
+    assert "attr_tweak" not in universal
+    assert OperatorWeights.parse("attr_tweak").names() == ("attr_tweak",)
     w = OperatorWeights.parse("delete=2,copy=1")
     np.testing.assert_allclose(w.probs(), [1 / 3, 2 / 3])
     with pytest.raises(ValueError):

@@ -12,7 +12,7 @@ import pytest
 from repro.core.evaluator import (EvalOutcome, FitnessCache,
                                   ParallelEvaluator, SerialEvaluator,
                                   WorkloadSpec, make_evaluator)
-from repro.core.mutation import Edit, random_edit
+from repro.core.edits import Edit, OperatorWeights, sample_edit
 from repro.core.search import GevoML
 from repro.core.serialize import patch_key, program_fingerprint
 from repro.workloads.twofc import build_twofc_step, build_twofc_training_workload
@@ -31,7 +31,8 @@ def some_patches(tiny_workload):
     rng = np.random.default_rng(0)
     out = [()]
     for _ in range(4):
-        out.append((random_edit(tiny_workload.program, rng),))
+        out.append((sample_edit(tiny_workload.program, rng,
+                                OperatorWeights.legacy()),))
     return out
 
 
@@ -110,7 +111,7 @@ def test_patch_key_stable_across_processes():
     here = patch_key(program_fingerprint(prog), edits)
     script = (
         "from repro.workloads.twofc import build_twofc_step\n"
-        "from repro.core.mutation import Edit\n"
+        "from repro.core.edits import Edit\n"
         "from repro.core.serialize import patch_key, program_fingerprint\n"
         "prog = build_twofc_step(batch=8, in_dim=16, hidden=8)\n"
         "edits = (Edit('delete', target_uid=3, seed=7),\n"

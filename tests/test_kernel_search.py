@@ -1,0 +1,188 @@
+"""Kernel-schedule search over the Pallas kernels: golden numerical parity
+(every kernel's Pallas/interp path vs its ref.py oracle through the
+KernelWorkload), canonical-hash stability across rebuilt workloads, cost
+model launchability gates, and GEVO-Shard on the shared engine (stubbed
+compiles)."""
+
+import numpy as np
+import pytest
+
+from repro.core import OperatorWeights, Patch, sample_edit
+from repro.core.evaluator import SerialEvaluator, workload_fingerprint
+from repro.core.fitness import InvalidVariant
+from repro.core.search import GevoML
+from repro.kernels.workloads import (BASELINES, BLOCK_DIMS, KERNELS, SHAPES,
+                                     build_kernel_workload)
+
+TWEAK = OperatorWeights.of(attr_tweak=1.0)
+
+
+@pytest.mark.parametrize("kernel", KERNELS)
+def test_golden_parity_default_schedule(kernel):
+    """The shipped default schedule executes the Pallas kernel (interpret
+    mode on CPU) within tolerance of its jnp oracle; ref impl is exact."""
+    w = build_kernel_workload(kernel)
+    t, err = w.evaluate(w.program)
+    assert t > 0 and err <= 2e-5
+    ref = w.space.encode(dict(BASELINES[kernel], impl="ref"))
+    t_ref, err_ref = w.evaluate(ref)
+    assert err_ref == 0.0
+    assert t_ref > t  # the fused kernel beats the naive path in the model
+
+
+@pytest.mark.parametrize("kernel", KERNELS)
+def test_every_schedule_in_space_is_launchable(kernel):
+    """Block-size choices divide the evaluation shape by construction, so
+    every genome executes (the paper's validity gate never fires here)."""
+    w = build_kernel_workload(kernel)
+    rng = np.random.default_rng(0)
+    for _ in range(8):
+        g = w.space.random(rng)
+        t, err = w.runner(g)
+        assert np.isfinite(t) and np.isfinite(err)
+
+
+@pytest.mark.parametrize("kernel", KERNELS)
+def test_schedule_edits_produce_launchable_configs(kernel):
+    """attr_tweak chains through the registry always decode to launchable
+    genomes: divisible block sizes and a finite evaluation."""
+    w = build_kernel_workload(kernel)
+    rng = np.random.default_rng(1)
+    patch = Patch()
+    for _ in range(6):
+        e = sample_edit(patch.apply(w.program), rng, TWEAK)
+        patch = patch.append(e)
+    prog = patch.apply(w.program)
+    genome = w.space.decode(prog)
+    for knob, v in genome.items():
+        assert v in w.space.choices(knob)
+        if knob in BLOCK_DIMS:
+            dim = SHAPES[kernel][BLOCK_DIMS[knob]]
+            assert dim % min(v, dim) == 0
+    t, err = w.evaluate(prog)
+    assert np.isfinite(t) and np.isfinite(err)
+
+
+def test_vmem_overflow_is_invalid_not_crash():
+    from repro.kernels.costs import schedule_time
+    with pytest.raises(InvalidVariant, match="VMEM"):
+        schedule_time("rmsnorm",
+                      {"impl": "pallas", "block_rows": 4096,
+                       "epilogue": "fused"},
+                      rows=4096, d=4096)
+    with pytest.raises(InvalidVariant, match="does not divide"):
+        schedule_time("rmsnorm",
+                      {"impl": "pallas", "block_rows": 96,
+                       "epilogue": "fused"},
+                      rows=256, d=64)
+
+
+def test_canonical_hash_stable_across_rebuilt_workloads():
+    """Fingerprints and patch keys are content addresses: two independently
+    built workloads (same kwargs) agree, so persistent caches are shareable
+    across processes and runs."""
+    a = build_kernel_workload("rmsnorm")
+    b = build_kernel_workload("rmsnorm")
+    assert workload_fingerprint(a) == workload_fingerprint(b)
+    ea = SerialEvaluator(a)
+    eb = SerialEvaluator(b)
+    rng = np.random.default_rng(3)
+    e = sample_edit(a.program, rng, TWEAK)
+    assert ea.key(Patch((e,))) == eb.key(Patch((e,)))
+    # a different time_mode is a different evaluation protocol -> new keys
+    c = build_kernel_workload("rmsnorm", time_mode="measured")
+    assert workload_fingerprint(c) != workload_fingerprint(a)
+
+
+def test_invalid_schedule_edit_cached_as_invalid():
+    """A patch that mangles the genome out of the space is an invalid
+    variant (cached, not crashed)."""
+    from repro.core import Edit
+    w = build_kernel_workload("rmsnorm")
+    ev = SerialEvaluator(w)
+    bad = Patch((Edit("delete", target_uid=w.program.ops[0].uid, seed=0),))
+    out = ev.evaluate_one(bad)
+    assert not out.ok and "missing" in out.error
+    assert ev.evaluate_one(bad).cached
+
+
+def test_kernel_search_end_to_end_improves_or_matches_default():
+    w = build_kernel_workload("rmsnorm")
+    s = GevoML(w, pop_size=6, n_elite=3, seed=0, init_mutations=1,
+               operators=TWEAK, evaluator=SerialEvaluator(w))
+    res = s.run(generations=2)
+    t0, _ = res.original_fitness
+    assert res.best_by_time().fitness[0] <= t0
+    stats = res.operator_stats()
+    assert set(stats) == {"attr_tweak"} and stats["attr_tweak"]["valid"] > 0
+
+
+def test_parallel_matches_serial_on_kernel_workload():
+    """Static-mode kernel fitness is deterministic, so a ParallelEvaluator
+    (workers rebuild the workload from its WorkloadSpec) agrees with
+    serial."""
+    from repro.core.evaluator import ParallelEvaluator
+    w = build_kernel_workload("rmsnorm")
+    rng = np.random.default_rng(5)
+    patches = []
+    for _ in range(4):
+        patches.append(Patch((sample_edit(w.program, rng, TWEAK),)))
+    serial = SerialEvaluator(w).evaluate_batch(patches)
+    pe = ParallelEvaluator(build_kernel_workload("rmsnorm"), n_workers=2)
+    try:
+        par = pe.evaluate_batch(patches)
+    finally:
+        pe.close()
+    assert [o.fitness for o in serial] == [o.fitness for o in par]
+
+
+# -- GEVO-Shard on the shared engine ----------------------------------------
+
+def _fake_run_cell(arch, shape, multi_pod, cfg_override=None,
+                   microbatches=1):
+    bits = (cfg_override.remat, cfg_override.attn_impl,
+            cfg_override.attn_block, cfg_override.loss_chunk,
+            cfg_override.fsdp, microbatches)
+    h = (abs(hash(bits)) % 997) / 997
+    return {"status": "ok", "roofline": {"step_s": 1.0 + h},
+            "memory": {"temp_size_in_bytes": int(h * 1e10)},
+            "compile_s": 0.0}
+
+
+def test_gevo_shard_runs_on_shared_engine(monkeypatch):
+    import repro.launch.dryrun as dryrun
+    from repro.core.autotune import GevoShard
+    monkeypatch.setattr(dryrun, "run_cell", _fake_run_cell)
+    s = GevoShard("qwen3-0.6b", "train_4k", pop_size=4, seed=0,
+                  verbose=False)
+    res = s.run(2)
+    assert res["baseline"]["fitness"][0] >= 1.0
+    assert res["best_step"][0] <= res["baseline"]["fitness"][0]
+    assert res["n_compiles"] >= 1
+    assert "hits" in res["evaluator"] and "attr_tweak" in res["operators"]
+    for entry in res["pareto"]:
+        assert set(entry["genome"]) == set(s.keys)
+
+
+def test_gevo_shard_genome_memo_one_compile_per_plan(monkeypatch):
+    import repro.launch.dryrun as dryrun
+    from repro.core.autotune import GevoShard
+    calls = []
+
+    def counting(*a, **k):
+        calls.append(1)
+        return _fake_run_cell(*a, **k)
+
+    monkeypatch.setattr(dryrun, "run_cell", counting)
+    s = GevoShard("qwen3-0.6b", "train_4k", pop_size=4, seed=1,
+                  verbose=False)
+    s.run(2)
+    assert len(calls) == len(s._genome_fits)
+
+
+def test_arch_alias_normalization():
+    from repro.configs import get_config
+    assert get_config("qwen3-0-6b") is get_config("qwen3-0.6b")
+    assert get_config("qwen1_5_4b") is get_config("qwen1.5-4b")
+    with pytest.raises(KeyError):
+        get_config("not-a-model")

@@ -1,10 +1,16 @@
 """Per-arch smoke tests (reduced configs, 1 fwd/train step on CPU) plus
-decode-vs-prefill consistency."""
+decode-vs-prefill consistency.
+
+~2 min of XLA compiles across the whole arch zoo, so the module is tier-2
+``slow`` (deselected by the default addopts; CI's non-blocking slow job and
+``pytest -m slow`` run it)."""
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytestmark = pytest.mark.slow
 
 from repro.configs import ARCHS, SHAPES, get_config, runnable_cells, smoke_config
 from repro.models.transformer import (Dist, decode_step, init_cache,

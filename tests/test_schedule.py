@@ -1,0 +1,131 @@
+"""Schedule genomes (core/schedule.py) + the attr_tweak operator: encode/
+decode round-trip, registry integration, doc round-trip, and the contract
+that schedule edits keep programs inside the declared space."""
+
+import numpy as np
+import pytest
+
+from repro.core import Edit, EditError, OperatorWeights, Patch, sample_edit
+from repro.core.edits import edit_from_doc, edit_to_doc, get_edit_op
+from repro.core.schedule import ScheduleError, ScheduleSpace
+
+SPACE = ScheduleSpace.of("test/space", {
+    "impl": ("pallas", "ref"),
+    "block": (32, 64, 128, 256),
+    "fuse": (True, False),
+})
+
+
+def test_encode_decode_roundtrip():
+    g = {"impl": "ref", "block": 128, "fuse": False}
+    prog = SPACE.encode(g)
+    prog.verify()
+    assert SPACE.decode(prog) == g
+    assert len(prog.ops) == 3 and len(prog.outputs) == 3
+
+
+def test_encode_rejects_out_of_space_genomes():
+    with pytest.raises(ScheduleError):
+        SPACE.encode({"impl": "pallas", "block": 999, "fuse": True})
+
+
+def test_default_and_random_genomes_are_in_space():
+    assert SPACE.contains(SPACE.default())
+    rng = np.random.default_rng(0)
+    for _ in range(20):
+        assert SPACE.contains(SPACE.random(rng))
+
+
+def test_decode_rejects_mangled_programs():
+    prog = SPACE.encode(SPACE.default())
+    victim = prog.ops.pop(0)  # knob removed (e.g. by a delete edit)
+    prog.outputs = [o for o in prog.outputs if o != victim.result]
+    with pytest.raises(ScheduleError, match="missing"):
+        SPACE.decode(prog)
+    # drifted choices are rejected too
+    prog2 = SPACE.encode(SPACE.default())
+    prog2.ops[0].attrs["choices"] = ("pallas",)
+    with pytest.raises(ScheduleError):
+        SPACE.decode(prog2)
+
+
+def test_space_validates_params():
+    with pytest.raises(ValueError):
+        ScheduleSpace.of("bad", {"k": ()})
+    with pytest.raises(ValueError):
+        ScheduleSpace.of("bad", {"k": (1, 1)})
+
+
+# -- the attr_tweak operator -------------------------------------------------
+
+def test_attr_tweak_changes_exactly_one_knob():
+    prog = SPACE.encode(SPACE.default())
+    rng = np.random.default_rng(0)
+    for _ in range(30):
+        e = sample_edit(prog, rng, OperatorWeights.of(attr_tweak=1.0))
+        q = Patch((e,)).apply(prog)
+        before, after = SPACE.decode(prog), SPACE.decode(q)
+        diff = [k for k in SPACE.names() if before[k] != after[k]]
+        assert len(diff) == 1
+
+
+def test_attr_tweak_patches_stay_in_space():
+    """Any chain of attr_tweak edits decodes to a genome of the space."""
+    prog = SPACE.encode(SPACE.default())
+    rng = np.random.default_rng(1)
+    patch = Patch()
+    for _ in range(12):
+        e = sample_edit(patch.apply(prog), rng,
+                        OperatorWeights.of(attr_tweak=1.0))
+        patch = patch.append(e)
+        assert SPACE.contains(SPACE.decode(patch.apply(prog)))
+
+
+def test_attr_tweak_requires_schedule_knobs():
+    from repro.core.builder import Builder
+    b = Builder("plain")
+    x = b.input("x", (4,))
+    b.output(b.relu(x))
+    plain = b.done()
+    op = get_edit_op("attr_tweak")
+    with pytest.raises(EditError, match="no schedule knobs"):
+        op.propose(plain, np.random.default_rng(0))
+
+
+def test_attr_tweak_rejects_out_of_range_choice():
+    prog = SPACE.encode(SPACE.default())
+    uid = prog.ops[0].uid  # "impl": 2 choices
+    with pytest.raises(EditError, match="out of range"):
+        Patch((Edit("attr_tweak", target_uid=uid, param=5.0),)).apply(prog)
+    with pytest.raises(EditError, match="not found"):
+        Patch((Edit("attr_tweak", target_uid=9999, param=0.0),)).apply(prog)
+
+
+def test_attr_tweak_doc_roundtrip_bit_identical():
+    prog = SPACE.encode(SPACE.default())
+    rng = np.random.default_rng(2)
+    for _ in range(10):
+        e = get_edit_op("attr_tweak").propose(prog, rng)
+        assert edit_from_doc(edit_to_doc(e)) == e
+
+
+def test_attr_tweak_apply_is_deterministic():
+    prog = SPACE.encode(SPACE.default())
+    e = Edit("attr_tweak", target_uid=prog.ops[1].uid, seed=7, param=3.0)
+    q1 = Patch((e,)).apply(prog)
+    q2 = Patch((e,)).apply(prog)
+    assert str(q1) == str(q2)
+    assert SPACE.decode(q1)["block"] == 256
+
+
+def test_schedule_program_serializes(tmp_path):
+    """Knob attrs (name + choices) survive the program save/load round-trip
+    and fingerprint identically."""
+    from repro.core.serialize import (load_program, program_fingerprint,
+                                      save_program)
+    prog = SPACE.encode({"impl": "ref", "block": 64, "fuse": True})
+    path = str(tmp_path / "sched")
+    save_program(prog, path)
+    back = load_program(path)
+    assert SPACE.decode(back) == {"impl": "ref", "block": 64, "fuse": True}
+    assert program_fingerprint(back) == program_fingerprint(prog)

@@ -1,0 +1,76 @@
+"""Hypothesis property tests for the schedule-genome contract: random
+attr_tweak chains always produce launchable configs (divisible block sizes),
+round-trip through docs bit-identically, and hash canonically (equal patches
+get equal cache keys, different schedules different keys)."""
+
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis",
+                    reason="property tests need hypothesis (pip install "
+                           ".[test])")
+from hypothesis import given, settings, strategies as st
+
+from repro.core import OperatorWeights, Patch, sample_edit
+from repro.core.serialize import patch_from_doc, patch_key
+from repro.kernels.workloads import BLOCK_DIMS, SHAPES, build_kernel_workload
+
+TWEAK = OperatorWeights.of(attr_tweak=1.0)
+
+
+def _random_patch(workload, seed: int, n: int) -> Patch:
+    rng = np.random.default_rng(seed)
+    patch = Patch()
+    for _ in range(n):
+        e = sample_edit(patch.apply(workload.program), rng, TWEAK)
+        patch = patch.append(e)
+    return patch
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 10_000), n=st.integers(1, 8),
+       kernel=st.sampled_from(sorted(SHAPES)))
+def test_schedule_edits_always_launchable(seed, n, kernel):
+    """Any attr_tweak chain decodes to an in-space genome whose block sizes
+    divide the kernel's evaluation shape — the config launches."""
+    w = build_kernel_workload(kernel)
+    patch = _random_patch(w, seed, n)
+    genome = w.space.decode(patch.apply(w.program))
+    assert w.space.contains(genome)
+    for knob, v in genome.items():
+        if knob in BLOCK_DIMS:
+            dim = SHAPES[kernel][BLOCK_DIMS[knob]]
+            assert dim % min(v, dim) == 0
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 10_000), n=st.integers(1, 6))
+def test_schedule_patch_doc_roundtrip_and_hash_stability(seed, n):
+    """Patch docs round-trip bit-identically and the canonical cache key is
+    a pure function of (fingerprint, patch doc)."""
+    from repro.core.evaluator import workload_fingerprint
+    w = build_kernel_workload("flash_attention")
+    fp = workload_fingerprint(w)
+    patch = _random_patch(w, seed, n)
+    back = patch_from_doc(patch.to_doc())
+    assert back == patch
+    assert patch_key(fp, back) == patch_key(fp, patch)
+    # a rebuilt workload yields the same fingerprint, hence the same key
+    fp2 = workload_fingerprint(build_kernel_workload("flash_attention"))
+    assert patch_key(fp2, patch) == patch_key(fp, patch)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_distinct_schedules_hash_distinctly(seed):
+    """Patches that decode to different genomes never collide on the cache
+    key (the key covers the edit list bit-for-bit)."""
+    w = build_kernel_workload("rmsnorm")
+    from repro.core.evaluator import workload_fingerprint
+    fp = workload_fingerprint(w)
+    a = _random_patch(w, seed, 2)
+    b = _random_patch(w, seed + 1, 2)
+    ga = w.space.decode(a.apply(w.program))
+    gb = w.space.decode(b.apply(w.program))
+    if ga != gb:
+        assert patch_key(fp, a) != patch_key(fp, b)

@@ -62,11 +62,14 @@ def test_describe_patch(result):
 
 
 def test_history_carries_per_operator_stats(result):
-    """Every history row snapshots proposed/valid/elite for all five
-    registered operators (default weights sample them all)."""
+    """Every history row snapshots proposed/valid/elite for the sampled
+    operator mix (default weights = every universal operator)."""
+    from repro.core.edits import get_edit_op
+    universal = tuple(n for n in registered_ops()
+                      if get_edit_op(n).universal)
     for row in result.history:
         ops = row["operators"]
-        assert tuple(sorted(ops)) == registered_ops()
+        assert tuple(sorted(ops)) == universal
         for counters in ops.values():
             assert set(counters) == {"proposed", "applied", "valid", "elite"}
             assert all(v >= 0 for v in counters.values())

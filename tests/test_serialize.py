@@ -4,9 +4,8 @@ GEVO workload."""
 import numpy as np
 import pytest
 
-from repro.core.edits import Patch
+from repro.core.edits import OperatorWeights, Patch, apply_patch, sample_edit
 from repro.core.interp import evaluate
-from repro.core.mutation import apply_patch, random_edit
 from repro.core.serialize import (load_patches, load_program, save_patches,
                                   save_program)
 from repro.workloads.tinyformer import (build_tinyformer_prediction_workload,
@@ -34,7 +33,7 @@ def test_program_roundtrip(tmp_path):
 def test_mutated_program_roundtrip(tmp_path):
     p = build_twofc_step(batch=4, in_dim=8, hidden=4)
     rng = np.random.default_rng(0)
-    q = apply_patch(p, [random_edit(p, rng)])
+    q = apply_patch(p, [sample_edit(p, rng, OperatorWeights.legacy())])
     path = str(tmp_path / "mut")
     save_program(q, path)
     r = load_program(path)
@@ -44,7 +43,9 @@ def test_mutated_program_roundtrip(tmp_path):
 def test_patch_roundtrip(tmp_path):
     p = build_twofc_step(batch=4, in_dim=8, hidden=4)
     rng = np.random.default_rng(1)
-    patches = [Patch((random_edit(p, rng),)), Patch((random_edit(p, rng),))]
+    legacy = OperatorWeights.legacy()
+    patches = [Patch((sample_edit(p, rng, legacy),)),
+               Patch((sample_edit(p, rng, legacy),))]
     path = str(tmp_path / "patches.json")
     save_patches(patches, path, fitnesses=[(1.0, 0.5), (2.0, 0.25)])
     loaded = load_patches(path)

@@ -9,7 +9,7 @@ mutation operators.
 import numpy as np
 import pytest
 
-from repro.core.mutation import apply_patch
+from repro.core.edits import apply_patch
 from repro.core.search import GevoML
 from repro.workloads.twofc import build_twofc_training_workload
 
