@@ -1,6 +1,7 @@
 """§Perf A/B measurements.
 
-Four suites (select with ``--suite {cells,evaluator,operators,kernels,all}``):
+Five suites (select with
+``--suite {cells,evaluator,operators,kernels,islands,all}``):
 
 * ``cells`` (default) — for each hillclimbed model cell, measures (under the
   FINAL roofline analyzer, so numbers are comparable) the paper-faithful
@@ -28,10 +29,18 @@ Four suites (select with ``--suite {cells,evaluator,operators,kernels,all}``):
   default schedule, writing experiments/perf/kernels_ab.json (results
   quoted in EXPERIMENTS.md).
 
+* ``islands`` — A/Bs the island-model orchestrator on the 2fcNet search:
+  1 island vs 4 heterogeneous islands (pop 8 each, fully-connected
+  migration, one shared fitness cache) at an equal unique-genome budget;
+  reports Pareto hypervolume, cross-island cache hits, and the migration
+  log, writing experiments/perf/islands_ab.json (results quoted in
+  EXPERIMENTS.md).
+
   PYTHONPATH=src python -m benchmarks.perf_ab
   PYTHONPATH=src python -m benchmarks.perf_ab --suite evaluator --workers 2
   PYTHONPATH=src python -m benchmarks.perf_ab --suite operators
   PYTHONPATH=src python -m benchmarks.perf_ab --suite kernels
+  PYTHONPATH=src python -m benchmarks.perf_ab --suite islands
 """
 
 from __future__ import annotations
@@ -304,6 +313,120 @@ def kernels_ab(generations: int = 6, seed: int = 0) -> dict:
     return out
 
 
+def islands_ab(generations: int = 6, seed: int = 0) -> dict:
+    """1 island vs 4 heterogeneous islands at an equal unique-genome budget
+    on the 2fcNet search.
+
+    The islands arm (4 islands × pop 8, heterogeneous operator palette,
+    fully-connected migration every 2 generations, one shared persistent
+    cache) runs first and sets the budget: the number of unique genomes it
+    executed (shared-cache entries — cross-island duplicates count once).
+    The baseline is ONE island of the same configuration (pop 8, the
+    default "all" mix, same engine) run generation by generation until its
+    unique-genome count reaches at least that budget — the single
+    population never sees *fewer* genomes than the fleet did.  Pareto
+    quality is 2-D hypervolume against a reference slightly worse than the
+    original program's fitness."""
+    import tempfile
+
+    from repro.core import IslandOrchestrator
+    from repro.core.evaluator import SerialEvaluator
+    from repro.core.nsga2 import hypervolume_2d
+    from repro.core.search import GevoML
+    from repro.workloads.twofc import build_twofc_training_workload
+
+    w = build_twofc_training_workload(batch=32, hidden=64, steps=60,
+                                      n_train=2048, n_test=1024)
+    to, eo = w.evaluate(w.program)
+    ref = (to * 1.05, eo + 0.05)
+    n_islands, pop_island = 4, 8
+
+    root = tempfile.mkdtemp(prefix="gevoml_islands_ab_")
+    orch = IslandOrchestrator(w, root_dir=root, n_islands=n_islands,
+                              pop_size=pop_island, migrate_every=2,
+                              n_migrants=2, topology="full")
+    t0 = time.perf_counter()
+    res = orch.run(generations=generations)
+    wall_islands = time.perf_counter() - t0
+    budget = res.cache_stats["entries"]
+    hv_islands = hypervolume_2d([i.fitness for i in res.pareto], ref)
+    islands_rec = {
+        "n_islands": n_islands, "pop_per_island": pop_island,
+        "topology": "full", "migrate_every": 2, "n_migrants": 2,
+        "generations": generations,
+        "wall_s": round(wall_islands, 4),
+        "unique_genomes": budget,
+        "migration_rounds": len(res.migration_log),
+        "cross_island_hits": res.cross_island_hits,
+        "pareto": [list(i.fitness) for i in res.pareto],
+        "pareto_sources": res.pareto_sources,
+        "hypervolume": hv_islands,
+        "per_island": res.cache_stats["per_island"],
+    }
+    print(f"[islands_ab] islands: {budget} unique genomes, "
+          f"hv={hv_islands:.3e}, "
+          f"{islands_rec['cross_island_hits']} cross-island hits")
+
+    # -- one-island baseline: run until it has seen >= `budget` genomes ----
+    ck = tempfile.mkdtemp(prefix="gevoml_islands_ab_single_")
+    ev = SerialEvaluator(w)
+    s = GevoML(w, pop_size=pop_island, n_elite=pop_island // 2, seed=seed,
+               evaluator=ev, checkpoint_dir=ck)
+
+    class _BudgetReached(Exception):
+        pass
+
+    def stop_when_budget(gen, row):
+        if len(ev.cache) >= budget:
+            raise _BudgetReached
+
+    t0 = time.perf_counter()
+    try:
+        s.run(generations=generations * 16, on_generation=stop_when_budget)
+    except _BudgetReached:
+        pass
+    wall_single = time.perf_counter() - t0
+    last_gen = json.load(open(os.path.join(ck, "latest.json")))["gen"]
+    r_single = s.run(generations=last_gen + 1, resume=True)  # no-op replay
+    ev.close()
+    hv_single = hypervolume_2d([i.fitness for i in r_single.pareto], ref)
+    single_rec = {
+        "pop_size": pop_island,
+        "generations_run": last_gen + 1,
+        "wall_s": round(wall_single, 4),
+        "unique_genomes": len(ev.cache),
+        "pareto": [list(i.fitness) for i in r_single.pareto],
+        "hypervolume": hv_single,
+    }
+    print(f"[islands_ab] single island: {single_rec['unique_genomes']} "
+          f"unique genomes over {last_gen + 1} generations, "
+          f"hv={hv_single:.3e}")
+
+    out = {
+        "generations": generations,
+        "original_fitness": [to, eo],
+        "hv_reference": list(ref),
+        "islands": islands_rec,
+        "single": single_rec,
+        "hv_ratio_islands_vs_single": round(
+            hv_islands / max(hv_single, 1e-30), 3),
+    }
+    # the acceptance bar for the island orchestrator (see EXPERIMENTS.md):
+    # equal-budget heterogeneous islands must not lose to one population,
+    # and the shared cache must actually be shared
+    assert islands_rec["cross_island_hits"] >= 1, \
+        "shared cache reported no cross-island hits"
+    assert hv_islands >= hv_single, \
+        (f"islands hypervolume {hv_islands:.3e} fell below the "
+         f"single-population baseline {hv_single:.3e}")
+    os.makedirs(OUT, exist_ok=True)
+    path = os.path.join(OUT, "islands_ab.json")
+    json.dump(out, open(path, "w"), indent=1)
+    print(f"[islands_ab] wrote {path}; hypervolume islands/single="
+          f"{out['hv_ratio_islands_vs_single']}x at >= equal budget")
+    return out
+
+
 def run_cells():
     os.makedirs(OUT, exist_ok=True)
 
@@ -356,7 +479,7 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--suite",
                     choices=("cells", "evaluator", "operators", "kernels",
-                             "all"),
+                             "islands", "all"),
                     default="cells")
     ap.add_argument("--workers", type=int, default=2,
                     help="ParallelEvaluator workers for --suite evaluator")
@@ -370,6 +493,8 @@ def main():
         operators_ab(generations=max(args.generations, 6))
     if args.suite in ("kernels", "all"):
         kernels_ab(generations=max(args.generations, 6))
+    if args.suite in ("islands", "all"):
+        islands_ab(generations=max(args.generations, 6))
 
 
 if __name__ == "__main__":

@@ -1,5 +1,16 @@
-"""Render the §Dry-run / §Roofline markdown tables from the recorded cell
-jsons.  Usage:  PYTHONPATH=src python -m benchmarks.report [--mesh single]
+"""Render markdown tables from recorded experiment jsons.
+
+Two modes:
+
+* default — the §Dry-run / §Roofline table from the recorded cell jsons
+  (``experiments/dryrun*``):  PYTHONPATH=src python -m benchmarks.report
+  [--mesh single]
+* ``--experiments`` — aggregate ``experiments/perf/*.json`` (the
+  ``benchmarks.perf_ab`` outputs) into the tables EXPERIMENTS.md quotes:
+  per-cell §Perf iteration logs (cell, iterations, best step, speedup) and
+  the A/B-suite headline numbers — so the headline figures are regenerable
+  instead of hand-copied:
+  PYTHONPATH=src python -m benchmarks.report --experiments
 """
 
 from __future__ import annotations
@@ -7,11 +18,17 @@ from __future__ import annotations
 import argparse
 import glob
 import json
+import os
+import re
 
 
 DEFAULT_DIR = ("experiments/dryrun_final"
                if glob.glob("experiments/dryrun_final/*.json")
                else "experiments/dryrun")
+PERF_DIR = "experiments/perf"
+
+# perf-cell record names look like <cell>_<step-index>_<description>.json
+_CELL_RE = re.compile(r"^(?P<cell>.+)_(?P<step>\d+)_(?P<desc>.+)$")
 
 
 def rows(mesh: str, d: str = None):
@@ -24,11 +41,8 @@ def rows(mesh: str, d: str = None):
     return out
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
-    args = ap.parse_args()
-    rs = rows(args.mesh)
+def dryrun_report(mesh: str, d: str = None) -> None:
+    rs = rows(mesh, d)
     print("| arch | shape | status | compile s | temp GB/dev | compute s | "
           "memory s | collective s | dominant | useful | roofline frac |")
     print("|---|---|---|---|---|---|---|---|---|---|---|")
@@ -42,6 +56,105 @@ def main():
               f"{temp:.1f} | {rl['compute_s']:.3g} | {rl['memory_s']:.3g} | "
               f"{rl['collective_s']:.3g} | {rl['dominant']} | "
               f"{rl['useful_ratio']:.2f} | {rl['roofline_fraction']:.4f} |")
+
+
+# -- --experiments: aggregate experiments/perf/*.json ----------------------
+
+def _perf_cells(d: str) -> dict[str, list[dict]]:
+    """Group <cell>_<n>_<desc>.json records by cell, ordered by step."""
+    cells: dict[str, list[dict]] = {}
+    for f in sorted(glob.glob(os.path.join(d, "*.json"))):
+        name = os.path.splitext(os.path.basename(f))[0]
+        m = _CELL_RE.match(name)
+        if not m:
+            continue
+        rec = json.load(open(f))
+        rec["_step"] = int(m.group("step"))
+        rec["_desc"] = m.group("desc")
+        cells.setdefault(m.group("cell"), []).append(rec)
+    for recs in cells.values():
+        recs.sort(key=lambda r: r["_step"])
+    return cells
+
+
+def perf_cell_table(d: str = PERF_DIR) -> None:
+    """§Perf iteration log: per cell, the baseline-to-best progression."""
+    cells = _perf_cells(d)
+    if not cells:
+        print(f"(no <cell>_<n>_<desc>.json records under {d}; run "
+              "`python -m benchmarks.perf_ab` first)")
+        return
+    print("| cell | iterations | baseline step s | best step s | "
+          "best iteration | speedup |")
+    print("|---|---|---|---|---|---|")
+    for cell, recs in sorted(cells.items()):
+        ok = [r for r in recs if r.get("status") == "ok"]
+        if not ok or recs[0].get("status") != "ok":
+            # no usable records, or the true step-0 baseline failed — a
+            # speedup against a later step would silently misreport
+            best = (f"{min(ok, key=lambda r: r['roofline']['step_s'])['_step']}"
+                    if ok else "")
+            print(f"| {cell} | {len(recs)} | FAIL | | {best} | |")
+            continue
+        base = recs[0]["roofline"]["step_s"]
+        best = min(ok, key=lambda r: r["roofline"]["step_s"])
+        bs = best["roofline"]["step_s"]
+        print(f"| {cell} | {len(recs)} | {base:.3f} | {bs:.3f} | "
+              f"{best['_step']}: {best['_desc']} | {base / bs:.2f}x |")
+
+
+def suite_headlines(d: str = PERF_DIR) -> None:
+    """The A/B-suite headline numbers EXPERIMENTS.md quotes."""
+    print("\n| suite | headline |")
+    print("|---|---|")
+
+    def load(name):
+        p = os.path.join(d, name)
+        return json.load(open(p)) if os.path.exists(p) else None
+
+    ev = load("evaluator_ab.json")
+    if ev:
+        print(f"| evaluator | parallel x{ev['workers']} = "
+              f"{ev['speedup_parallel_vs_serial']}x vs serial; warm-cache "
+              f"rerun = {ev['parallel_warm_cache']['n_evals']} re-evals |")
+    op = load("operators_ab.json")
+    if op:
+        print(f"| operators | five-op mix = "
+              f"{op['hv_ratio_full_vs_legacy']}x hypervolume vs legacy; "
+              f"best error {op['full']['best_error']:.3f} vs "
+              f"{op['legacy']['best_error']:.3f} |")
+    kn = load("kernels_ab.json")
+    if kn:
+        parts = [f"{k}: {r['evolved_vs_default']}x vs default"
+                 for k, r in kn["kernels"].items()]
+        print(f"| kernels | evolved schedules: {'; '.join(parts)} |")
+    isl = load("islands_ab.json")
+    if isl:
+        print(f"| islands | 4 heterogeneous islands = "
+              f"{isl['hv_ratio_islands_vs_single']}x hypervolume vs 1 "
+              f"island at >= equal unique-genome budget "
+              f"({isl['islands']['unique_genomes']} genomes, "
+              f"{isl['islands']['cross_island_hits']} cross-island cache "
+              f"hits) |")
+    if not any((ev, op, kn, isl)):
+        print(f"| (none) | no *_ab.json suite records under {d} |")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="single", choices=["single", "multi"])
+    ap.add_argument("--experiments", action="store_true",
+                    help="aggregate experiments/perf/*.json into the "
+                         "EXPERIMENTS.md tables instead of the dry-run "
+                         "report")
+    ap.add_argument("--dir", default=None,
+                    help="records directory (default per mode)")
+    args = ap.parse_args()
+    if args.experiments:
+        perf_cell_table(args.dir or PERF_DIR)
+        suite_headlines(args.dir or PERF_DIR)
+    else:
+        dryrun_report(args.mesh, args.dir)
 
 
 if __name__ == "__main__":

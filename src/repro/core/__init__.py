@@ -1,8 +1,10 @@
 """The GEVO-ML system: HLO-lite IR, the pluggable edit layer (operator
 registry + Patch algebra), schedule genomes (kernel-schedule search),
-NSGA-II, the generational search loop, and the evaluation engine (persistent
-fitness cache + serial/parallel evaluators).  See docs/ARCHITECTURE.md for
-the module map and DESIGN.md for representation details."""
+NSGA-II, the generational search loop, the evaluation engine (persistent
+fitness cache + serial/parallel evaluators), and the island-model
+orchestrator (multi-population search with migration over a shared cache).
+See docs/ARCHITECTURE.md for the module map and DESIGN.md for
+representation details."""
 
 from .edits import (Edit, EditError, EditOp, OperatorStats, OperatorWeights,
                     Patch, apply_patch, minimize_patch, register_edit,
@@ -10,6 +12,9 @@ from .edits import (Edit, EditError, EditOp, OperatorStats, OperatorWeights,
 from .evaluator import (EvalOutcome, FitnessCache, ParallelEvaluator,
                         SerialEvaluator, WorkloadSpec, make_evaluator)
 from .fitness import KernelWorkload
+from .islands import (IslandOrchestrator, IslandResult, IslandSpec,
+                      default_island_specs)
+from .islands import plan as plan_islands
 from .schedule import ScheduleError, ScheduleSpace
 from .search import GevoML, Individual, SearchResult, describe_patch
 
@@ -21,4 +26,6 @@ __all__ = [
     "EvalOutcome", "FitnessCache", "ParallelEvaluator", "SerialEvaluator",
     "WorkloadSpec", "make_evaluator",
     "GevoML", "Individual", "SearchResult", "describe_patch",
+    "IslandOrchestrator", "IslandResult", "IslandSpec",
+    "default_island_specs", "plan_islands",
 ]

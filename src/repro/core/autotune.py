@@ -18,8 +18,14 @@ XLA compile per plan instead of the paper's 48 GPU-hours of retraining.
 semantics and the CLI are unchanged; results additionally report evaluator
 cache stats and per-operator search stats.
 
+``--islands N`` runs the same genome space as N heterogeneous in-process
+islands (ring migration, shared persistent cache) through
+:mod:`repro.core.islands` — the runner closure does not pickle, so islands
+alternate within this process while the genome memo and fitness cache are
+shared across all of them.
+
 CLI:  PYTHONPATH=src python -m repro.core.autotune --arch qwen2-vl-72b \
-          --shape train_4k --generations 4 --pop 6
+          --shape train_4k --generations 4 --pop 6 [--islands 3]
 """
 
 from __future__ import annotations
@@ -71,7 +77,8 @@ class GevoShard:
     def __init__(self, arch: str, shape: str = "train_4k", *,
                  multi_pod: bool = False, pop_size: int = 6,
                  n_elite: int = 3, seed: int = 0, verbose: bool = True,
-                 cache_path: str | None = None):
+                 cache_path: str | None = None, islands: int = 0,
+                 islands_dir: str | None = None):
         from ..configs import SHAPES, get_config  # late: needs XLA_FLAGS set
         self.arch, self.shape, self.multi_pod = arch, shape, multi_pod
         self.cfg = get_config(arch)
@@ -83,6 +90,8 @@ class GevoShard:
         self.rng = np.random.default_rng(seed)
         self.verbose = verbose
         self.cache_path = cache_path
+        self.islands = islands
+        self.islands_dir = islands_dir
         self.records: list[dict] = []
         self._genome_fits: dict[tuple, tuple | None] = {}
         self.space = ScheduleSpace.of(
@@ -138,9 +147,64 @@ class GevoShard:
         return {k: (a[k] if self.rng.random() < 0.5 else b[k])
                 for k in self.keys}
 
+    # -- decode + baseline fold-in (shared by single-pop and island runs) ---
+    def _assemble(self, original_fitness, pareto_individuals):
+        decode = lambda ind: self.space.decode(  # noqa: E731
+            ind.patch.apply(self.workload.program))
+        # the engine's population holds only >=1-edit variants; fold the
+        # baseline plan back into the front (the pre-engine loop seeded
+        # the population with it)
+        from .nsga2 import pareto_front
+        cand = ([(self.base, tuple(original_fitness), "<original>")]
+                + [(decode(i), i.fitness, i.patch.describe())
+                   for i in pareto_individuals])
+        keep = pareto_front(np.array([c[1] for c in cand]))
+        pareto = [{"genome": cand[i][0], "fitness": list(cand[i][1]),
+                   "patch": cand[i][2]} for i in sorted(keep)]
+        return {
+            "arch": self.arch, "shape": self.shape,
+            "baseline": {"genome": self.base,
+                         "fitness": list(original_fitness)},
+            "pareto": pareto,
+            "best_step": min((tuple(p["fitness"]) for p in pareto),
+                             key=lambda f: f[0]),
+            "n_compiles": len(self._genome_fits),
+        }
+
+    def _run_islands(self, generations: int):
+        """Multi-population search: N in-process islands over the plan
+        genome (the runner closure does not pickle, so islands alternate in
+        this process; evaluation still flows through one shared persistent
+        cache and the full migration machinery)."""
+        import tempfile
+
+        from .islands import IslandOrchestrator, default_island_specs
+        root = self.islands_dir or tempfile.mkdtemp(prefix="gevoshard_isl_")
+        specs = default_island_specs(self.islands,
+                                     operators={"attr_tweak": 1.0},
+                                     base_seed=self.seed)
+        orch = IslandOrchestrator(
+            self.workload, root_dir=root, specs=specs,
+            pop_size=self.pop_size, n_elite=self.n_elite,
+            migrate_every=2, n_migrants=2, topology="ring",
+            cache_path=self.cache_path, verbose=self.verbose)
+        res = orch.run(generations=generations)
+        out = self._assemble(res.original_fitness, res.pareto)
+        out["islands"] = {
+            "n": self.islands, "root_dir": root, "topology": "ring",
+            "migration_rounds": len(res.migration_log),
+            "cross_island_hits": res.cross_island_hits,
+            "cache": res.cache_stats["entries"],
+            "per_island": {name: r.operator_stats()
+                           for name, r in zip(res.names, res.islands)},
+        }
+        return out
+
     # -- the search: shared NSGA-II + evaluator engine ----------------------
     def run(self, generations: int = 4):
         from .search import GevoML
+        if self.islands >= 2:
+            return self._run_islands(generations)
         # the with-block owns the evaluator (GevoML.close is a no-op for a
         # caller-provided one), so a persistent cache handle never leaks
         with SerialEvaluator(self.workload,
@@ -153,29 +217,10 @@ class GevoShard:
                        seed=self.seed, evaluator=ev,
                        verbose=self.verbose)
             res = s.run(generations=generations)
-            decode = lambda ind: self.space.decode(  # noqa: E731
-                ind.patch.apply(self.workload.program))
-            # the engine's population holds only >=1-edit variants; fold the
-            # baseline plan back into the front (the pre-engine loop seeded
-            # the population with it)
-            from .nsga2 import pareto_front
-            cand = ([(self.base, tuple(res.original_fitness), "<original>")]
-                    + [(decode(i), i.fitness, i.patch.describe())
-                       for i in res.pareto])
-            keep = pareto_front(np.array([c[1] for c in cand]))
-            pareto = [{"genome": cand[i][0], "fitness": list(cand[i][1]),
-                       "patch": cand[i][2]} for i in sorted(keep)]
-            return {
-                "arch": self.arch, "shape": self.shape,
-                "baseline": {"genome": self.base,
-                             "fitness": list(res.original_fitness)},
-                "pareto": pareto,
-                "best_step": min((tuple(p["fitness"]) for p in pareto),
-                                 key=lambda f: f[0]),
-                "n_compiles": len(self._genome_fits),
-                "evaluator": s.evaluator.stats(),
-                "operators": res.operator_stats(),
-            }
+            out = self._assemble(res.original_fitness, res.pareto)
+            out["evaluator"] = s.evaluator.stats()
+            out["operators"] = res.operator_stats()
+            return out
 
 
 def main() -> None:
@@ -189,11 +234,19 @@ def main() -> None:
     ap.add_argument("--cache", default=None,
                     help="persistent fitness-cache path (JSONL); rerun with "
                          "the same path to re-measure nothing")
+    ap.add_argument("--islands", type=int, default=0,
+                    help="run N heterogeneous islands (ring migration, "
+                         "shared cache) instead of one population; 0/1 = "
+                         "single population")
+    ap.add_argument("--islands-dir", default=None,
+                    help="island state directory (manifest, checkpoints, "
+                         "shared cache); default: fresh temp dir")
     ap.add_argument("--out", default=None)
     args = ap.parse_args()
     t0 = time.time()
     s = GevoShard(args.arch, args.shape, multi_pod=args.multi_pod,
-                  pop_size=args.pop, seed=args.seed, cache_path=args.cache)
+                  pop_size=args.pop, seed=args.seed, cache_path=args.cache,
+                  islands=args.islands, islands_dir=args.islands_dir)
     res = s.run(args.generations)
     res["wall_s"] = round(time.time() - t0, 1)
     res["records"] = s.records

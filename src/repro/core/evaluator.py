@@ -86,6 +86,15 @@ class FitnessCache:
     re-executed.  The JSONL format is crash-safe (a torn final line is
     dropped on load) and mergeable (concatenate files from several runs).
 
+    **Concurrent writers are safe**: records are appended with a single
+    ``os.write`` on an ``O_APPEND`` descriptor under an advisory ``flock``,
+    so two processes flushing simultaneously can never interleave partial
+    lines (island searches share one cache file this way).  ``reload()``
+    picks up records other writers appended since the last read, and
+    ``writer`` tags each record with its author so cross-writer hits —
+    fitness one island measured and another consumed — are countable
+    (``cross_hits``).
+
     Caveat: the fitness layer folds *any* execution failure into
     invalidity, so a transient crash (OOM, backend error) would be
     remembered forever; pass ``persist_invalid=False`` to keep invalid
@@ -93,29 +102,51 @@ class FitnessCache:
     machines (costs re-evaluating invalid variants on each fresh run)."""
 
     def __init__(self, path: str | None = None, *,
-                 persist_invalid: bool = True):
+                 persist_invalid: bool = True, writer: str | None = None):
         self.path = path
         self.persist_invalid = persist_invalid
+        self.writer = writer
         self._mem: dict[str, EvalOutcome] = {}
+        self._writers: dict[str, str] = {}   # key -> author tag (if tagged)
         self.hits = 0
         self.misses = 0
-        self._fh = None
+        self.cross_hits = 0   # hits on entries another writer authored
+        self._fd = None
+        self._read_offset = 0
         if path:
             d = os.path.dirname(path)
             if d:
                 os.makedirs(d, exist_ok=True)
-            if os.path.exists(path):
-                with open(path) as f:
-                    for line in f:
-                        line = line.strip()
-                        if not line:
-                            continue
-                        try:
-                            rec = json.loads(line)
-                        except json.JSONDecodeError:
-                            continue  # torn tail from a crashed writer
-                        self._mem[rec["key"]] = EvalOutcome.from_doc(rec)
-            self._fh = open(path, "a")
+            self._fd = os.open(path, os.O_APPEND | os.O_CREAT | os.O_WRONLY,
+                               0o644)
+            self.reload()
+
+    def reload(self) -> int:
+        """Read records appended since the last load (other writers' flushes
+        included).  Returns the number of new keys absorbed."""
+        if self.path is None or not os.path.exists(self.path):
+            return 0
+        added = 0
+        with open(self.path, "rb") as f:
+            f.seek(self._read_offset)
+            for raw in f:
+                if not raw.endswith(b"\n"):
+                    break  # torn tail from a crashed writer: drop, re-read later
+                self._read_offset += len(raw)
+                line = raw.decode(errors="replace").strip()
+                if not line:
+                    continue
+                try:
+                    rec = json.loads(line)
+                except json.JSONDecodeError:
+                    continue  # corrupt line (pre-hardening writer): skip past
+                key = rec["key"]
+                if key not in self._mem:
+                    self._mem[key] = EvalOutcome.from_doc(rec)
+                    if rec.get("writer") is not None:
+                        self._writers[key] = rec["writer"]
+                    added += 1
+        return added
 
     def __len__(self) -> int:
         return len(self._mem)
@@ -127,6 +158,9 @@ class FitnessCache:
         out = self._mem.get(key)
         if out is None:
             return None
+        author = self._writers.get(key)
+        if author is not None and author != self.writer:
+            self.cross_hits += 1
         return replace(out, cached=True)
 
     def put(self, key: str, outcome: EvalOutcome) -> None:
@@ -134,11 +168,25 @@ class FitnessCache:
             return
         outcome = replace(outcome, cached=False)
         self._mem[key] = outcome
-        if self._fh is not None and (outcome.ok or self.persist_invalid):
+        if self.writer is not None:
+            self._writers[key] = self.writer
+        if self._fd is not None and (outcome.ok or self.persist_invalid):
             rec = {"key": key}
             rec.update(outcome.to_doc())
-            self._fh.write(json.dumps(rec) + "\n")
-            self._fh.flush()
+            if self.writer is not None:
+                rec["writer"] = self.writer
+            self._append_line(json.dumps(rec) + "\n")
+
+    def _append_line(self, line: str) -> None:
+        """Crash- and concurrency-safe append: one whole line per syscall on
+        an O_APPEND descriptor, under an advisory lock, so concurrent
+        writers' records never interleave mid-line."""
+        data = line.encode()
+        _flock(self._fd)
+        try:
+            os.write(self._fd, data)
+        finally:
+            _funlock(self._fd)
 
     @property
     def hit_rate(self) -> float:
@@ -148,12 +196,30 @@ class FitnessCache:
     def stats(self) -> dict:
         return {"entries": len(self._mem), "hits": self.hits,
                 "misses": self.misses, "hit_rate": self.hit_rate,
+                "cross_hits": self.cross_hits,
                 "persistent": self.path is not None}
 
     def close(self) -> None:
-        if self._fh is not None:
-            self._fh.close()
-            self._fh = None
+        if self._fd is not None:
+            os.close(self._fd)
+            self._fd = None
+
+
+try:
+    import fcntl as _fcntl
+
+    def _flock(fd: int) -> None:
+        _fcntl.flock(fd, _fcntl.LOCK_EX)
+
+    def _funlock(fd: int) -> None:
+        _fcntl.flock(fd, _fcntl.LOCK_UN)
+except ImportError:  # non-POSIX: O_APPEND single-write is the only guard
+
+    def _flock(fd: int) -> None:
+        pass
+
+    def _funlock(fd: int) -> None:
+        pass
 
 
 # --------------------------------------------------------------------------

@@ -1,0 +1,129 @@
+"""Island configurations and the core-mapping planner.
+
+An :class:`IslandSpec` is everything that makes one island's search differ
+from its neighbours': RNG seed, operator mix, mutation/crossover rates, and
+(optionally) its own population size.  ``default_island_specs`` builds the
+heterogeneous palette the GEVO follow-up work motivates — different operator
+mixes maintain different kinds of diversity, and migration lets the mixes
+trade discoveries — while :func:`plan` maps islands (and each island's
+evaluator workers) onto the machine's cores.
+"""
+
+from __future__ import annotations
+
+import os
+from dataclasses import dataclass
+
+from ..edits import OperatorWeights
+
+# (operators, mutation_rate, init_mutations): one entry per default island.
+# Cycled when more islands than entries are requested.  The palette spans
+# the registry along different emphases — the full mix, a delete-heavy
+# "time reducer", a const_perturb-heavy "learning-rate tuner", and a
+# structural swap/insert mix — while every island keeps at least one
+# error-driving operator (a pure {copy, delete} island measurably drags the
+# fleet; pin ``operators="legacy"`` in an explicit IslandSpec to study it).
+_PALETTE: tuple[tuple[str, float, int], ...] = (
+    ("all", 0.5, 3),
+    ("delete=2,copy=1,const_perturb=1", 0.7, 3),
+    ("copy=1,delete=1,const_perturb=3", 0.7, 2),
+    ("swap=2,insert=2,delete=1,const_perturb=1", 0.9, 2),
+)
+
+# rate/init variations used when every island shares one operator mix
+# (schedule searches: the only legal operator is attr_tweak)
+_RATE_PALETTE: tuple[tuple[float, int], ...] = (
+    (0.5, 3), (0.9, 2), (0.3, 3), (0.7, 1),
+)
+
+
+@dataclass(frozen=True)
+class IslandSpec:
+    """One island's search configuration.  ``operators`` takes anything
+    ``OperatorWeights.coerce`` does (spec string, mapping, None for the
+    default mix); ``pop_size``/``n_elite`` of ``None`` inherit the
+    orchestrator-level defaults."""
+
+    name: str
+    seed: int = 0
+    operators: object = None
+    mutation_rate: float = 0.5
+    crossover_rate: float = 0.8
+    init_mutations: int = 3
+    pop_size: int | None = None
+    n_elite: int | None = None
+
+    def to_doc(self) -> dict:
+        ops = self.operators
+        if ops is not None:
+            # normalize to a plain mapping so docs compare across sessions
+            ops = dict(OperatorWeights.coerce(ops).items)
+        return {"name": self.name, "seed": self.seed, "operators": ops,
+                "mutation_rate": self.mutation_rate,
+                "crossover_rate": self.crossover_rate,
+                "init_mutations": self.init_mutations,
+                "pop_size": self.pop_size, "n_elite": self.n_elite}
+
+    @staticmethod
+    def from_doc(d: dict) -> "IslandSpec":
+        return IslandSpec(**d)
+
+
+def default_island_specs(n: int, *, operators=None, base_seed: int = 0,
+                         mutation_rate: float | None = None
+                         ) -> list[IslandSpec]:
+    """``n`` heterogeneous island configs.  With ``operators=None`` each
+    island draws a different mix from the built-in palette; with an explicit
+    mix (e.g. ``{"attr_tweak": 1.0}`` for schedule searches) all islands
+    share it and differ in rates and seeds instead."""
+    specs = []
+    for i in range(n):
+        if operators is None:
+            ops, mut, init = _PALETTE[i % len(_PALETTE)]
+        else:
+            mut, init = _RATE_PALETTE[i % len(_RATE_PALETTE)]
+            ops = operators
+        if mutation_rate is not None:
+            mut = mutation_rate
+        specs.append(IslandSpec(
+            name=f"island-{i}", seed=base_seed + 7919 * i, operators=ops,
+            mutation_rate=mut, init_mutations=init))
+    return specs
+
+
+@dataclass(frozen=True)
+class CorePlan:
+    """How islands map onto cores: whether islands run as processes, and how
+    many evaluator worker processes each island gets on top of its own."""
+
+    n_islands: int
+    processes: bool
+    eval_workers: int   # per island; 0/1 = in-process SerialEvaluator
+    cores: int
+
+    def describe(self) -> str:
+        mode = "process" if self.processes else "in-process"
+        ev = (f"{self.eval_workers} evaluator workers each"
+              if self.eval_workers > 1 else "serial evaluation")
+        return (f"{self.n_islands} {mode} islands, {ev} "
+                f"({self.cores} cores seen)")
+
+
+def plan(n_islands: int, *, cores: int | None = None,
+         reserve: int = 1) -> CorePlan:
+    """Map ``n_islands`` onto the machine: one core per island loop, the
+    remainder split into per-island evaluator workers, ``reserve`` cores
+    left for the orchestrator/OS.  Falls back to in-process islands when the
+    machine is smaller than the fleet (oversubscribing spawned JAX contexts
+    is slower than just alternating)."""
+    if n_islands < 1:
+        raise ValueError("n_islands must be >= 1")
+    cores = cores if cores is not None else (os.cpu_count() or 1)
+    usable = max(1, cores - reserve)
+    if n_islands < 2 or usable < n_islands:
+        return CorePlan(n_islands, False, 0, cores)
+    per_island = usable // n_islands
+    # one core of each island's share runs its loop; the rest become
+    # evaluator workers (a lone worker is pure overhead vs inline eval)
+    workers = per_island - 1
+    return CorePlan(n_islands, True, workers if workers >= 2 else 0, cores)

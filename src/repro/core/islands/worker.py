@@ -1,0 +1,127 @@
+"""The per-epoch island runner: one function, two transports.
+
+``run_island_epoch`` advances one island to a target generation.  It is a
+plain top-level function so the orchestrator can call it directly
+(in-process mode) or ship it to a spawned worker process (process mode) —
+both paths execute identical code, and because candidate generation is
+RNG-driven and ``static`` fitness is deterministic, both produce bit-equal
+checkpoints.
+
+Workload transport mirrors :class:`~repro.core.evaluator.ParallelEvaluator`:
+pickle when possible, else rebuild in the worker from the deterministic
+:class:`~repro.core.evaluator.WorkloadSpec` the builder attached.  All
+search state lives in the island's checkpoint directory; the shared fitness
+cache file is the only channel workers write concurrently (safe: the cache
+appends whole lines atomically under an advisory lock).
+"""
+
+from __future__ import annotations
+
+import importlib
+import pickle
+
+from ..edits import Patch
+from ..evaluator import (FitnessCache, ParallelEvaluator, SerialEvaluator,
+                         WorkloadSpec)
+from .config import IslandSpec
+
+
+def island_payload(workload, spec: IslandSpec, *, checkpoint_dir: str,
+                   cache_path: str | None, generations: int, resume: bool,
+                   migrants: list[dict] | None, pop_size: int,
+                   n_elite: int, max_tries: int, eval_workers: int = 0,
+                   verbose: bool = False, inline: bool = True) -> dict:
+    """Build the (picklable, unless ``inline``) argument doc for
+    :func:`run_island_epoch`.  ``inline=True`` keeps the live workload
+    object for in-process execution; ``inline=False`` converts it to
+    pickle-or-spec transport for a spawned worker."""
+    payload = {
+        "island": spec.to_doc(),
+        "checkpoint_dir": checkpoint_dir,
+        "cache_path": cache_path,
+        "generations": generations,
+        "resume": resume,
+        "migrants": migrants or [],
+        "pop_size": pop_size,
+        "n_elite": n_elite,
+        "max_tries": max_tries,
+        "eval_workers": eval_workers,
+        "verbose": verbose,
+    }
+    if inline:
+        payload["workload"] = workload
+        return payload
+    payload["workload"] = None
+    from ..edits import operator_modules
+    mods = operator_modules()
+    if "__main__" in mods:
+        raise ValueError(
+            "a custom edit operator is registered in __main__, which "
+            "spawned island workers cannot re-import; move the "
+            "@register_edit class into an importable module to use "
+            "process-mode islands")
+    payload["edit_modules"] = mods
+    try:
+        payload["pickled"] = pickle.dumps(workload)
+    except Exception:
+        wl_spec = getattr(workload, "spec", None)
+        if wl_spec is None:
+            raise ValueError(
+                f"workload {getattr(workload, 'name', '?')!r} is not "
+                "picklable and has no WorkloadSpec; process-mode islands "
+                "need one (or use in-process islands)")
+        payload["pickled"] = None
+        payload["spec"] = wl_spec
+    return payload
+
+
+def _materialize_workload(payload: dict):
+    if payload["workload"] is not None:
+        return payload["workload"]
+    for mod in payload.get("edit_modules", ()):
+        importlib.import_module(mod)   # re-register custom edit operators
+    if payload.get("pickled") is not None:
+        return pickle.loads(payload["pickled"])
+    spec: WorkloadSpec = payload["spec"]
+    return spec.build()
+
+
+def run_island_epoch(payload: dict) -> dict:
+    """Advance one island to ``payload["generations"]`` total generations,
+    injecting ``payload["migrants"]`` (patch docs) iff the island has not
+    yet checkpointed the epoch's first generation.  Returns a small summary
+    doc; the authoritative state is the island's checkpoint directory."""
+    from ..search import GevoML   # late: workers import this module first
+
+    workload = _materialize_workload(payload)
+    spec = IslandSpec.from_doc(payload["island"])
+    cache = FitnessCache(payload["cache_path"], writer=spec.name)
+    if payload.get("eval_workers", 0) > 1:
+        evaluator = ParallelEvaluator(workload,
+                                      n_workers=payload["eval_workers"],
+                                      cache=cache)
+    else:
+        evaluator = SerialEvaluator(workload, cache=cache)
+    with evaluator:
+        search = GevoML(
+            workload,
+            pop_size=spec.pop_size or payload["pop_size"],
+            n_elite=spec.n_elite or payload["n_elite"],
+            init_mutations=spec.init_mutations,
+            crossover_rate=spec.crossover_rate,
+            mutation_rate=spec.mutation_rate,
+            max_tries=payload["max_tries"],
+            seed=spec.seed,
+            verbose=payload.get("verbose", False),
+            operators=spec.operators,
+            evaluator=evaluator,
+            checkpoint_dir=payload["checkpoint_dir"])
+        search.run(
+            generations=payload["generations"],
+            resume=payload["resume"],
+            migrants=[Patch.from_doc(d["edits"])
+                      for d in payload["migrants"]],
+            on_generation=payload.get("on_generation"))
+        return {"name": spec.name,
+                "gen": payload["generations"] - 1,
+                "evaluator": search.evaluator.stats()}

@@ -1,33 +1,2 @@
-"""DEPRECATED compatibility shim — the edit layer moved to
-:mod:`repro.core.edits`.
-
-This module kept the hard-coded Copy/Delete operator pair; the pluggable
-registry (``@register_edit``), the first-class :class:`Patch`, the three new
-operators (``swap``, ``insert``, ``const_perturb``), operator-weighted
-sampling, and patch minimization all live in ``repro.core.edits`` and are
-re-exported from ``repro.core``.  Import from there; these aliases exist so
-pre-registry callers keep working and will be removed in a future PR.
-"""
-
-from __future__ import annotations
-
-import warnings
-
-import numpy as np
-
-from .edits import (Edit, EditError, Patch, apply_edit,  # noqa: F401
-                    apply_patch, resize_value)
-from .edits.sampling import OperatorWeights, sample_edit
-
-warnings.warn(
-    "repro.core.mutation is deprecated; import from repro.core.edits "
-    "(re-exported by repro.core)", DeprecationWarning, stacklevel=2)
-
-__all__ = ["Edit", "EditError", "Patch", "apply_edit", "apply_patch",
-           "resize_value", "random_edit"]
-
-
-def random_edit(prog, rng: np.random.Generator) -> Edit:
-    """Deprecated: sample a legacy (50/50 copy/delete) edit.  Use
-    ``repro.core.edits.sample_edit`` with an ``OperatorWeights`` mix."""
-    return sample_edit(prog, rng, OperatorWeights.legacy())
+raise ImportError("repro.core.mutation was removed; import from "
+                  "repro.core.edits (re-exported by repro.core)")

@@ -48,8 +48,8 @@ from .edits import (Edit, EditError, OperatorStats, OperatorWeights, Patch,
 from .evaluator import Evaluator, FitnessCache, SerialEvaluator
 from .fitness import InvalidVariant
 from .nsga2 import pareto_front, rank_select, tournament
-from .serialize import (patch_doc, patch_from_doc, rng_from_state,
-                        rng_state_doc)
+from .serialize import (atomic_write_json, patch_doc, patch_from_doc,
+                        rng_from_state, rng_state_doc)
 
 
 @dataclass(frozen=True)
@@ -243,16 +243,8 @@ class GevoML:
             "counters": {"n_invalid": self._n_invalid_outcomes,
                          "evaluator": self.evaluator.stats()},
         }
-        blob = json.dumps(doc)
-        path = self._checkpoint_path(f"gen_{gen:04d}.json")
-        tmp = path + ".tmp"
-        with open(tmp, "w") as f:
-            f.write(blob)
-        os.replace(tmp, path)
-        latest = self._checkpoint_path("latest.json")
-        with open(latest + ".tmp", "w") as f:
-            f.write(blob)
-        os.replace(latest + ".tmp", latest)
+        atomic_write_json(self._checkpoint_path(f"gen_{gen:04d}.json"), doc)
+        atomic_write_json(self._checkpoint_path("latest.json"), doc)
 
     def _load_checkpoint(self) -> dict | None:
         path = self._checkpoint_path("latest.json")
@@ -266,9 +258,47 @@ class GevoML:
                 f"{self.evaluator.fingerprint[:12]}…)")
         return doc
 
+    # -- migrant injection (island model) -----------------------------------
+    def _inject_migrants(self, pop: list[Individual], migrants
+                         ) -> list[Individual]:
+        """Evaluate foreign elite patches (cache hits when islands share a
+        fitness store) and replace the worst residents by NSGA-II
+        (rank, crowding).  Consumes no RNG and is a deterministic function of
+        (pop, migrants), so a resumed run replays it bit-exactly."""
+        seen = {i.patch for i in pop}
+        patches = []
+        for m in migrants:
+            p = Patch.coerce(m)
+            if p not in seen:
+                seen.add(p)
+                patches.append(p)
+        # preserve island identity: at most half the population is replaced
+        patches = patches[:max(1, self.pop_size // 2)]
+        incoming = []
+        for patch, out in zip(patches, self.evaluator.evaluate_batch(patches)):
+            if out.ok:
+                incoming.append(Individual(patch, out.fitness))
+            else:
+                self._n_invalid_outcomes += 1
+        if not incoming:
+            return pop
+        objs = np.array([i.fitness for i in pop])
+        rank, crowd, _ = rank_select(objs, len(pop))
+        order = sorted(range(len(pop)), key=lambda i: (rank[i], -crowd[i]))
+        keep = [pop[i] for i in sorted(order[:len(pop) - len(incoming)])]
+        return keep + incoming
+
     # -- main loop ------------------------------------------------------------
-    def run(self, generations: int = 10, *, resume: bool = False
-            ) -> SearchResult:
+    def run(self, generations: int = 10, *, resume: bool = False,
+            migrants=None, on_generation=None) -> SearchResult:
+        """Run (or continue) the search.
+
+        ``migrants`` is the island-model injection hook: an iterable of
+        patches (from other islands' elites) folded into the population
+        before the first generation of this call runs.  ``on_generation`` is
+        called as ``on_generation(gen, history_row)`` after each generation's
+        checkpoint is written — orchestrators use it for progress and tests
+        use it to simulate crashes at an exact generation."""
         state = (self._load_checkpoint()
                  if resume and self.checkpoint_dir else None)
         if state is not None:
@@ -287,6 +317,7 @@ class GevoML:
             self.evaluator.n_invalid = ev_stats["n_invalid"]
             self.evaluator.cache.hits = ev_stats["hits"]
             self.evaluator.cache.misses = ev_stats["misses"]
+            self.evaluator.cache.cross_hits = ev_stats.get("cross_hits", 0)
             start_gen = state["gen"] + 1
             t0 = _time.perf_counter() - (history[-1]["wall_s"]
                                          if history else 0.0)
@@ -301,6 +332,9 @@ class GevoML:
                              "initial individuals")
             history = []
             start_gen = 0
+
+        if migrants:
+            pop = self._inject_migrants(pop, migrants)
 
         for gen in range(start_gen, generations):
             objs = np.array([i.fitness for i in pop])
@@ -335,6 +369,8 @@ class GevoML:
                       f"cache_hit={h['cache_hit_rate']:.0%}")
             if self.checkpoint_dir:
                 self._save_checkpoint(gen, original, pop, history)
+            if on_generation is not None:
+                on_generation(gen, history[-1])
         objs = np.array([i.fitness for i in pop])
         pf = [pop[i] for i in pareto_front(objs)]
         # de-duplicate pareto members by fitness

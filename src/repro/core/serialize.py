@@ -124,6 +124,25 @@ def patch_key(fingerprint: str, patch) -> str:
 
 
 # --------------------------------------------------------------------------
+# Atomic JSON documents (checkpoints, island manifests)
+# --------------------------------------------------------------------------
+
+
+def atomic_write_json(path: str, doc: dict) -> None:
+    """Write a JSON doc so readers never observe a torn file: serialize to a
+    sibling tmp file, then ``os.replace`` (atomic on POSIX).  Search
+    checkpoints and island manifests both go through this — a crash mid-write
+    leaves the previous snapshot intact."""
+    d = os.path.dirname(path)
+    if d:
+        os.makedirs(d, exist_ok=True)
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(doc, f)
+    os.replace(tmp, path)
+
+
+# --------------------------------------------------------------------------
 # RNG state (for search checkpoint/resume)
 # --------------------------------------------------------------------------
 

@@ -1,0 +1,139 @@
+"""FitnessCache under concurrent multi-process writers: atomic line
+appends, no interleaved partial lines, reload() absorption, writer tags and
+cross-writer hit accounting."""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro.core.evaluator import EvalOutcome, FitnessCache
+
+_REPO = os.path.join(os.path.dirname(__file__), "..")
+
+# Each writer process appends `n` records with a distinctive payload, key
+# space disjoint per writer.  Error strings are padded so records are long
+# enough that non-atomic writes would visibly tear.
+_WRITER_SCRIPT = """
+import sys
+from repro.core.evaluator import EvalOutcome, FitnessCache
+
+path, wid, n = sys.argv[1], sys.argv[2], int(sys.argv[3])
+c = FitnessCache(path, writer=wid)
+for i in range(n):
+    c.put(f"{wid}-{i:05d}",
+          EvalOutcome(fitness=(float(i), float(i) / 2))
+          if i % 3 else EvalOutcome(fitness=None, error="x" * 200))
+c.close()
+"""
+
+
+def _spawn_writers(path, n_writers, n_records):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = (os.path.join(_REPO, "src")
+                         + os.pathsep + env.get("PYTHONPATH", ""))
+    procs = [subprocess.Popen(
+        [sys.executable, "-c", _WRITER_SCRIPT, path, f"w{i}",
+         str(n_records)], env=env)
+        for i in range(n_writers)]
+    for p in procs:
+        assert p.wait() == 0
+    return procs
+
+
+def test_concurrent_writers_never_tear_lines(tmp_path):
+    """Hammer one cache file from several processes; every line must parse
+    and every record must survive."""
+    path = str(tmp_path / "fitness.jsonl")
+    n_writers, n_records = 4, 200
+    _spawn_writers(path, n_writers, n_records)
+
+    with open(path) as f:
+        lines = f.read().splitlines()
+    assert len(lines) == n_writers * n_records
+    keys = set()
+    for line in lines:
+        rec = json.loads(line)   # a torn/interleaved line would raise here
+        keys.add(rec["key"])
+        assert rec["writer"] in {f"w{i}" for i in range(n_writers)}
+    assert len(keys) == n_writers * n_records
+
+    c = FitnessCache(path)
+    assert len(c) == n_writers * n_records
+    assert c.get("w0-00000").error == "x" * 200
+    assert c.get("w1-00001").fitness == (1.0, 0.5)
+    c.close()
+
+
+def test_reload_absorbs_other_writers(tmp_path):
+    path = str(tmp_path / "fitness.jsonl")
+    a = FitnessCache(path, writer="a")
+    a.put("ka", EvalOutcome(fitness=(1.0, 2.0)))
+    b = FitnessCache(path, writer="b")   # sees a's record at load
+    assert "ka" in b
+    a.put("ka2", EvalOutcome(fitness=(3.0, 4.0)))
+    assert "ka2" not in b
+    assert b.reload() == 1               # absorbs the new record only
+    assert b.get("ka2").fitness == (3.0, 4.0)
+    assert b.reload() == 0
+    a.close()
+    b.close()
+
+
+def test_cross_writer_hits_are_counted(tmp_path):
+    path = str(tmp_path / "fitness.jsonl")
+    a = FitnessCache(path, writer="a")
+    a.put("shared", EvalOutcome(fitness=(1.0, 2.0)))
+    a.put("own", EvalOutcome(fitness=(5.0, 6.0)))
+    b = FitnessCache(path, writer="b")
+    assert b.cross_hits == 0
+    b.get("shared")
+    assert b.cross_hits == 1             # authored by a, consumed by b
+    a.get("own")
+    assert a.cross_hits == 0             # own records never count
+    assert "cross_hits" in a.stats()
+    a.close()
+    b.close()
+
+
+def test_untagged_records_stay_compatible(tmp_path):
+    """Caches written before writer tags existed load fine and never count
+    as cross hits."""
+    path = str(tmp_path / "fitness.jsonl")
+    with open(path, "w") as f:
+        f.write(json.dumps({"key": "old", "fitness": [1.0, 2.0],
+                            "error": None}) + "\n")
+    c = FitnessCache(path, writer="me")
+    assert c.get("old").fitness == (1.0, 2.0)
+    assert c.cross_hits == 0
+    c.close()
+
+
+def test_torn_tail_dropped_then_reread(tmp_path):
+    """A crashed writer's torn (newline-less) tail is dropped on load and
+    re-absorbed by reload() once the line completes."""
+    path = str(tmp_path / "fitness.jsonl")
+    with open(path, "w") as f:
+        f.write(json.dumps({"key": "k1", "fitness": [1.0, 1.0],
+                            "error": None}) + "\n")
+        f.write('{"key": "k2", "fitness": [2.0')   # torn mid-record
+    c = FitnessCache(path)
+    assert "k1" in c and "k2" not in c
+    with open(path, "a") as f:
+        f.write(', 2.0], "error": null}\n')        # the writer finishes
+    assert c.reload() == 1
+    assert c.get("k2").fitness == (2.0, 2.0)
+    c.close()
+
+
+@pytest.mark.parametrize("persist_invalid", [True, False])
+def test_persist_invalid_still_honored(tmp_path, persist_invalid):
+    path = str(tmp_path / "fitness.jsonl")
+    c = FitnessCache(path, persist_invalid=persist_invalid)
+    c.put("bad", EvalOutcome(fitness=None, error="boom"))
+    c.close()
+    c2 = FitnessCache(path)
+    assert ("bad" in c2) == persist_invalid
+    c2.close()

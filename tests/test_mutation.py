@@ -2,9 +2,7 @@
 registry and used to exercise the deprecated ``core.mutation`` shim; it now
 tests the same contracts — validity after repair, determinism, resize
 properties, crossover validity rate (~80% in the paper) — through
-``repro.core.edits``, plus one test pinning the shim's deprecation)."""
-
-import warnings
+``repro.core.edits``, plus one test pinning the removed shim's tombstone)."""
 
 import numpy as np
 import pytest
@@ -146,15 +144,8 @@ def test_crossover_validity_rate_near_paper():
     assert ok / total > 0.5, f"validity rate {ok/total:.2f} far below paper's ~80%"
 
 
-def test_mutation_shim_reexports_with_deprecation_warning():
-    """core.mutation stays importable (pre-registry callers) but warns."""
-    import importlib
-    import repro.core.mutation as shim
-    with warnings.catch_warnings(record=True) as caught:
-        warnings.simplefilter("always")
-        shim = importlib.reload(shim)
-    assert any(issubclass(w.category, DeprecationWarning) for w in caught)
-    assert shim.Edit is Edit and shim.apply_patch is apply_patch
-    # random_edit still samples the paper's legacy copy/delete mix
-    e = shim.random_edit(_program(), np.random.default_rng(0))
-    assert e.kind in ("copy", "delete")
+def test_mutation_shim_removed_with_pointer():
+    """The deprecated core.mutation shim (removed after one PR of
+    deprecation) fails fast with a pointer at the edits package."""
+    with pytest.raises(ImportError, match="repro.core.edits"):
+        import repro.core.mutation  # noqa: F401
