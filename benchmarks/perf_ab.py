@@ -1,7 +1,7 @@
 """§Perf A/B measurements.
 
-Five suites (select with
-``--suite {cells,evaluator,operators,kernels,islands,all}``):
+Six suites (select with
+``--suite {cells,evaluator,operators,kernels,islands,serving,all}``):
 
 * ``cells`` (default) — for each hillclimbed model cell, measures (under the
   FINAL roofline analyzer, so numbers are comparable) the paper-faithful
@@ -36,11 +36,19 @@ Five suites (select with
   log, writing experiments/perf/islands_ab.json (results quoted in
   EXPERIMENTS.md).
 
+* ``serving`` — A/Bs the deployment layer end to end: evolves the
+  continuous-batching engine's serving schedule under measured fitness,
+  exports the winner through the ArtifactRegistry, resolves it back from
+  disk, and re-measures the default schedule vs the evolved-artifact route
+  on the same staggered request trace, writing
+  experiments/perf/serving_ab.json (results quoted in EXPERIMENTS.md).
+
   PYTHONPATH=src python -m benchmarks.perf_ab
   PYTHONPATH=src python -m benchmarks.perf_ab --suite evaluator --workers 2
   PYTHONPATH=src python -m benchmarks.perf_ab --suite operators
   PYTHONPATH=src python -m benchmarks.perf_ab --suite kernels
   PYTHONPATH=src python -m benchmarks.perf_ab --suite islands
+  PYTHONPATH=src python -m benchmarks.perf_ab --suite serving
 """
 
 from __future__ import annotations
@@ -427,6 +435,129 @@ def islands_ab(generations: int = 6, seed: int = 0) -> dict:
     return out
 
 
+def serving_ab(generations: int = 2, seed: int = 0,
+               artifacts_dir: str = "experiments/artifacts") -> dict:
+    """Default serving schedule vs an evolved serving artifact on the
+    continuous-batching engine.
+
+    The evolved arm is produced the way a deployment would produce it:
+    ``GevoML`` (attr_tweak over the serve schedule space) searches engine
+    schedules under *measured* ``(s/token, mean latency)`` fitness on a
+    fixed staggered request trace, the fastest Pareto member is exported to
+    the :class:`ArtifactRegistry`, and the A/B re-measures both routes from
+    a fresh engine with the artifact **resolved back from disk** — the
+    GEVO validate-winners-in-the-target-application loop.  Serving latency
+    records are published into a shared FitnessCache under the ``serve``
+    writer tag alongside the search's own records."""
+    import statistics
+    import tempfile
+
+    from repro.configs import smoke_config
+    from repro.core import GevoML
+    from repro.core.deploy import (DEFAULT_ENGINE_SCHEDULE, Artifact,
+                                   ArtifactRegistry, ServeEngine, demo_trace,
+                                   engine_schedule_from, build_serve_workload)
+    from repro.core.evaluator import FitnessCache, SerialEvaluator
+
+    arch = "qwen3-0.6b"
+    trace_cfg = dict(n_requests=12, prompt_len=8, gen=8)
+    stagger = 4
+    w = build_serve_workload(arch, smoke=True, stagger=stagger, seed=seed,
+                             **trace_cfg)
+    cfg = smoke_config(arch)
+    cache_path = os.path.join(tempfile.mkdtemp(prefix="gevoml_serving_ab_"),
+                              "fitness.jsonl")
+
+    # -- evolve the serving schedule under measured fitness -----------------
+    ev = SerialEvaluator(w, cache=FitnessCache(cache_path, writer="search"))
+    s = GevoML(w, pop_size=6, n_elite=3, seed=seed, init_mutations=2,
+               mutation_rate=0.9, operators={"attr_tweak": 1.0},
+               evaluator=ev)
+    t0 = time.perf_counter()
+    res = s.run(generations=generations)
+    wall_search = time.perf_counter() - t0
+    best = res.best_by_time()
+    best_genome = w.space.decode(best.patch.apply(w.program))
+
+    # -- ship it: export the winner, resolve it back ------------------------
+    registry = ArtifactRegistry(artifacts_dir)
+    art_path = registry.export(Artifact(
+        kind="serve", name=cfg.name, shape="smoke",
+        genome=best_genome, fitness=best.fitness,
+        meta={"rule": "min s_per_token (measured)", "trace": trace_cfg,
+              "stagger": stagger, "suite": "serving_ab"}))
+    resolved = registry.resolve(cfg.name, "smoke", kind="serve")
+    evolved_schedule = engine_schedule_from(resolved)
+
+    # -- re-measure both routes from fresh engines --------------------------
+    def measure(tag, schedule, publish=False):
+        runs = []
+        for rep in range(3):
+            engine = ServeEngine(cfg, max_len=trace_cfg["prompt_len"]
+                                 + trace_cfg["gen"],
+                                 max_slots=schedule["max_slots"],
+                                 prefill_chunk=schedule["prefill_chunk"])
+            engine.run(demo_trace(cfg, seed=seed, **trace_cfg),
+                       stagger=stagger)
+            stats = engine.stats()
+            if publish and rep == 0:
+                cache = FitnessCache(cache_path, writer="serve")
+                engine.publish_stats(cache, name=cfg.name,
+                                     shape={"schedule": tag, **trace_cfg})
+                cache.close()
+            runs.append(stats)
+        med = statistics.median(r["throughput_tok_s"] for r in runs)
+        rec = {"schedule": schedule,
+               "throughput_tok_s": med,
+               "runs_tok_s": [r["throughput_tok_s"] for r in runs],
+               "per_variant": runs[0]["per_variant"],
+               "decode_batches": runs[0]["decode_batches"]}
+        print(f"[serving_ab] {tag}: {schedule} -> {med:.1f} tok/s "
+              f"(runs {rec['runs_tok_s']})")
+        return rec
+
+    default_rec = measure("default", dict(DEFAULT_ENGINE_SCHEDULE),
+                          publish=True)
+    evolved_rec = measure("evolved", evolved_schedule, publish=True)
+    ev.close()
+
+    n_serve_records = sum(
+        1 for line in open(cache_path)
+        if json.loads(line).get("writer") == "serve")
+    out = {
+        "arch": cfg.name, "trace": trace_cfg, "stagger": stagger,
+        "generations": generations,
+        "search": {"wall_s": round(wall_search, 2), "n_evals": s.n_evals,
+                   "space_size": w.space.size(),
+                   "best_genome": best_genome,
+                   "best_fitness": list(best.fitness),
+                   "default_fitness": list(res.original_fitness)},
+        "artifact": {"path": art_path,
+                     "fingerprint": resolved.fingerprint()},
+        "default": default_rec,
+        "evolved": evolved_rec,
+        "throughput_ratio_evolved_vs_default": round(
+            evolved_rec["throughput_tok_s"]
+            / max(default_rec["throughput_tok_s"], 1e-9), 3),
+        "serve_cache_records": n_serve_records,
+    }
+    # the acceptance bar: the evolved-artifact route must not lose to the
+    # default schedule on the trace it was evolved for, and serving must
+    # have fed latency records back into the shared cache
+    assert n_serve_records >= 2, "no serve-tagged records in the cache"
+    assert out["throughput_ratio_evolved_vs_default"] >= 1.0, \
+        (f"evolved serving artifact lost to the default schedule "
+         f"({evolved_rec['throughput_tok_s']:.1f} vs "
+         f"{default_rec['throughput_tok_s']:.1f} tok/s)")
+    os.makedirs(OUT, exist_ok=True)
+    path = os.path.join(OUT, "serving_ab.json")
+    json.dump(out, open(path, "w"), indent=1)
+    print(f"[serving_ab] wrote {path}; evolved/default throughput="
+          f"{out['throughput_ratio_evolved_vs_default']}x "
+          f"({n_serve_records} serve-tagged cache records)")
+    return out
+
+
 def run_cells():
     os.makedirs(OUT, exist_ok=True)
 
@@ -479,7 +610,7 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--suite",
                     choices=("cells", "evaluator", "operators", "kernels",
-                             "islands", "all"),
+                             "islands", "serving", "all"),
                     default="cells")
     ap.add_argument("--workers", type=int, default=2,
                     help="ParallelEvaluator workers for --suite evaluator")
@@ -495,6 +626,8 @@ def main():
         kernels_ab(generations=max(args.generations, 6))
     if args.suite in ("islands", "all"):
         islands_ab(generations=max(args.generations, 6))
+    if args.suite in ("serving", "all"):
+        serving_ab(generations=min(args.generations, 3))
 
 
 if __name__ == "__main__":

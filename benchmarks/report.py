@@ -136,7 +136,18 @@ def suite_headlines(d: str = PERF_DIR) -> None:
               f"({isl['islands']['unique_genomes']} genomes, "
               f"{isl['islands']['cross_island_hits']} cross-island cache "
               f"hits) |")
-    if not any((ev, op, kn, isl)):
+    sv = load("serving_ab.json")
+    if sv:
+        g = sv["evolved"]["schedule"]
+        print(f"| serving | evolved serving artifact "
+              f"(max_slots={g['max_slots']}, "
+              f"prefill_chunk={g['prefill_chunk']}) = "
+              f"{sv['throughput_ratio_evolved_vs_default']}x throughput vs "
+              f"the default schedule "
+              f"({sv['evolved']['throughput_tok_s']:.0f} vs "
+              f"{sv['default']['throughput_tok_s']:.0f} tok/s; "
+              f"{sv['serve_cache_records']} serve-tagged cache records) |")
+    if not any((ev, op, kn, isl, sv)):
         print(f"| (none) | no *_ab.json suite records under {d} |")
 
 

@@ -77,6 +77,9 @@ def main():
                     choices=("auto", "on", "off"))
     ap.add_argument("--root", default=None,
                     help="state directory (default: fresh temp dir)")
+    ap.add_argument("--export-front", default=None, metavar="PATH",
+                    help="write the merged Pareto front as a deployable "
+                         "front doc (ParetoFront.load / the deploy CLI)")
     ap.add_argument("--resume", action="store_true",
                     help="continue a killed run from --root")
     ap.add_argument("--seed", type=int, default=0)
@@ -138,6 +141,11 @@ def main():
         print(f"  {name}: best time={bt:.3e} best err={be:.4f} "
               f"evals={ev.get('n_evals', '?')} "
               f"cross_hits={ev.get('cross_hits', '?')}")
+    if args.export_front:
+        res.export_front(args.export_front, origin=root)
+        print(f"\nexported merged front to {args.export_front} "
+              f"(query it: python -m repro.core.deploy select "
+              f"--front {args.export_front} --within 0.02)")
     print(f"\nresume any time with: --root {root} --resume")
 
 

@@ -15,6 +15,8 @@ Flags:
     --time-mode MODE    static (deterministic roofline, default) | measured
                         (median wall-clock of the jitted variant)
     --minimize          ddmin the best-by-time patch to its key tweaks
+    --artifacts DIR     export the winner to an ArtifactRegistry (serving
+                        paths pick it up via resolve_kernel_schedule)
     --parallel N / --cache PATH / --generations G   as in quickstart.py
 """
 
@@ -43,6 +45,10 @@ def main():
                     help="evaluation worker processes (0/1 = in-process)")
     ap.add_argument("--cache", default=None,
                     help="persistent fitness cache path (JSONL)")
+    ap.add_argument("--artifacts", default=None,
+                    help="export the winning schedule to this "
+                         "ArtifactRegistry directory (resolved by serving "
+                         "paths via resolve_kernel_schedule)")
     args = ap.parse_args()
 
     print(f"Building {args.kernel} schedule workload "
@@ -83,6 +89,15 @@ def main():
         print(f"minimized best-by-time patch: {len(best.patch)} -> "
               f"{len(small)} edits at identical fitness; "
               f"key tweaks: {small.describe()}")
+    if args.artifacts:
+        from repro.core.deploy import ArtifactRegistry
+        from repro.kernels.workloads import kernel_artifact
+        genome = w.space.decode(best.patch.apply(w.program))
+        path = ArtifactRegistry(args.artifacts).export(kernel_artifact(
+            args.kernel, genome, fitness=best.fitness,
+            meta={"time_mode": args.time_mode, "within_tol": within_tol,
+                  "rule": "min time s.t. error <= default + 1e-3"}))
+        print(f"exported winning schedule to {path}")
     evaluator.close()
 
 

@@ -1,11 +1,15 @@
 """The GEVO-ML system: HLO-lite IR, the pluggable edit layer (operator
 registry + Patch algebra), schedule genomes (kernel-schedule search),
 NSGA-II, the generational search loop, the evaluation engine (persistent
-fitness cache + serial/parallel evaluators), and the island-model
-orchestrator (multi-population search with migration over a shared cache).
-See docs/ARCHITECTURE.md for the module map and DESIGN.md for
-representation details."""
+fitness cache + serial/parallel evaluators), the island-model orchestrator
+(multi-population search with migration over a shared cache), and the
+deployment layer (Pareto-front queries, the artifact registry, and the
+continuous-batching serving engine).  See docs/ARCHITECTURE.md for the
+module map, DESIGN.md for representation details, and docs/USER_GUIDE.md
+for the end-to-end walkthrough."""
 
+from .deploy import (Artifact, ArtifactRegistry, FrontMember, ParetoFront,
+                     ServeEngine, ServeRequest, ServeResult)
 from .edits import (Edit, EditError, EditOp, OperatorStats, OperatorWeights,
                     Patch, apply_patch, minimize_patch, register_edit,
                     registered_ops, sample_edit)
@@ -28,4 +32,6 @@ __all__ = [
     "GevoML", "Individual", "SearchResult", "describe_patch",
     "IslandOrchestrator", "IslandResult", "IslandSpec",
     "default_island_specs", "plan_islands",
+    "ParetoFront", "FrontMember", "Artifact", "ArtifactRegistry",
+    "ServeEngine", "ServeRequest", "ServeResult",
 ]

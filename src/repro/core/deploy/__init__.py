@@ -1,0 +1,36 @@
+"""The deployment layer: close the evolve → select → export → serve gap.
+
+Searches (:mod:`repro.core.search`, :mod:`repro.core.islands`,
+:mod:`repro.core.autotune`) end with recorded Pareto fronts; this package
+turns a recorded front into served traffic:
+
+* :class:`ParetoFront` — load any search output and :meth:`~ParetoFront.
+  select` under a constraint (the paper's "fastest variant within a 2%
+  accuracy relaxation" as code);
+* :class:`ArtifactRegistry` / :class:`Artifact` — fingerprinted, atomically
+  written winner manifests keyed by ``(kind, name, shape)``, with
+  byte-exact round-trips and verified resolution;
+* :class:`ServeEngine` — the continuous-batching serving loop (request
+  queue, micro-batched prefill + decode interleaving, default/evolved
+  variant routing, measured latency fed back into the shared
+  :class:`~repro.core.evaluator.FitnessCache` under a ``serve`` tag).
+
+See ``docs/USER_GUIDE.md`` (deploy section) for the end-to-end walkthrough.
+"""
+
+from .engine import (DEFAULT_ENGINE_SCHEDULE, SERVE_PLAN_KEYS, SERVE_SPACE,
+                     ServeEngine, ServeRequest, ServeResult,
+                     apply_plan_artifact, build_serve_workload, demo_trace,
+                     engine_schedule_from, oneshot_generate,
+                     serve_schedule_space)
+from .front import FrontMember, ParetoFront
+from .registry import Artifact, ArtifactRegistry, shape_tag
+
+__all__ = [
+    "ParetoFront", "FrontMember",
+    "Artifact", "ArtifactRegistry", "shape_tag",
+    "ServeEngine", "ServeRequest", "ServeResult",
+    "apply_plan_artifact", "engine_schedule_from", "oneshot_generate",
+    "demo_trace", "build_serve_workload", "serve_schedule_space",
+    "SERVE_SPACE", "SERVE_PLAN_KEYS", "DEFAULT_ENGINE_SCHEDULE",
+]

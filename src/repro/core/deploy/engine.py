@@ -1,0 +1,583 @@
+"""The continuous-batching serving loop: evolved genomes under live traffic.
+
+The previous ``launch/serve.py`` was a one-shot demo — fix a batch of B
+prompts, prefill them together, decode them in lockstep, exit.  Production
+serving is a *queue*: requests arrive over time with different prompt and
+generation lengths, and throughput comes from keeping the decode batch full
+while new arrivals prefill.  :class:`ServeEngine` is that loop, sized for
+this repo's smoke configs but shaped like the real thing:
+
+* a **request queue** with slot admission — up to ``max_slots`` sequences
+  in flight, ``prefill_chunk`` new admissions micro-batched per tick;
+* **prefill/decode interleaving** — each tick admits + prefills new
+  requests (grouped by prompt length, so prefill batches are pad-free) and
+  advances every in-flight sequence one token (grouped by cache position,
+  so grouped decode is numerically identical to lockstep decode);
+* **per-variant routing** — requests route to the ``default`` model
+  configuration or to an ``evolved`` one (a distribution-plan artifact's
+  serve-relevant knobs applied via ``cfg.scaled``), with an A/B fraction,
+  so an evolved winner can take traffic gradually;
+* **measured latency feedback** — per-request TTFT / latency / tokens, and
+  :meth:`publish_stats` writes per-variant (s/token, mean latency) records
+  into the shared :class:`~repro.core.evaluator.FitnessCache` under a
+  ``serve`` writer tag — the serving fleet reports fitness into the same
+  store the search reads.
+
+The engine's *own* schedule (``max_slots``, ``prefill_chunk``) is a
+searchable genome: :func:`serve_schedule_space` declares it as a
+:class:`~repro.core.schedule.ScheduleSpace` and :func:`build_serve_workload`
+wraps a replayed request trace as a measured-fitness
+:class:`~repro.core.fitness.KernelWorkload`, so ``GevoML`` evolves the
+serving schedule with the same engine that evolves kernels — and the winner
+ships through the :class:`~repro.core.deploy.registry.ArtifactRegistry`.
+
+Model functions are imported lazily from ``repro.models`` (this module is
+the bridge between the core search stack and the launch stack, like
+``core/autotune.py``).
+"""
+
+from __future__ import annotations
+
+import hashlib
+import json
+import time as _time
+from collections import deque
+from dataclasses import dataclass, field
+from functools import lru_cache
+
+import numpy as np
+
+from ..evaluator import EvalOutcome, FitnessCache
+from ..schedule import ScheduleSpace
+from .registry import Artifact, shape_tag
+
+# Model-config knobs a serving path may safely take from a distribution-plan
+# artifact (training-only knobs like remat/loss_chunk are ignored).
+SERVE_PLAN_KEYS = ("attn_impl", "attn_block")
+
+# The engine's own searchable schedule + the shipped default (the old
+# one-shot launcher behaved like a conservative 2-slot engine).
+SERVE_SPACE: dict[str, tuple] = {"max_slots": (1, 2, 4, 8),
+                                 "prefill_chunk": (1, 2, 4)}
+DEFAULT_ENGINE_SCHEDULE: dict = {"max_slots": 2, "prefill_chunk": 1}
+
+
+def serve_schedule_space(arch: str) -> ScheduleSpace:
+    """The serving-engine schedule as a searchable genome space."""
+    return ScheduleSpace.of(f"serve/{arch}", SERVE_SPACE)
+
+
+def apply_plan_artifact(cfg, artifact: Artifact | None):
+    """The evolved model configuration for serving: the artifact's
+    serve-relevant knobs applied over ``cfg`` (weights stay compatible —
+    these knobs change the computation schedule, not the parameters)."""
+    if artifact is None:
+        return cfg
+    fields = {k: artifact.genome[k] for k in SERVE_PLAN_KEYS
+              if k in artifact.genome}
+    return cfg.scaled(**fields) if fields else cfg
+
+
+def engine_schedule_from(artifact: Artifact | None) -> dict:
+    """The engine schedule an artifact prescribes (defaults filled in)."""
+    g = dict(DEFAULT_ENGINE_SCHEDULE)
+    if artifact is not None:
+        g.update({k: artifact.genome[k] for k in SERVE_SPACE
+                  if k in artifact.genome})
+    return g
+
+
+# --------------------------------------------------------------------------
+# Requests and results
+# --------------------------------------------------------------------------
+
+
+@dataclass
+class ServeRequest:
+    """One generation request: a prompt (1-D int token array) and a token
+    budget.  ``variant`` pins the route (``"default"``/``"evolved"``);
+    ``None`` lets the engine's A/B fraction decide."""
+
+    uid: str
+    tokens: np.ndarray
+    max_new_tokens: int = 16
+    eos_id: int | None = None
+    variant: str | None = None
+
+
+@dataclass
+class ServeResult:
+    """A completed request: generated tokens, the route it took, and its
+    measured timeline (submit -> admit -> first token -> done)."""
+
+    uid: str
+    variant: str
+    tokens: list[int] = field(default_factory=list)
+    t_submit: float = 0.0
+    t_admit: float = 0.0
+    t_first: float = 0.0
+    t_done: float = 0.0
+
+    @property
+    def latency(self) -> float:
+        return self.t_done - self.t_submit
+
+    @property
+    def ttft(self) -> float:
+        return self.t_first - self.t_submit
+
+
+@dataclass
+class _Lane:
+    """One resident sequence in a variant's lane batch."""
+    req: ServeRequest
+    index: int                      # current cache length (next write pos)
+    tokens: list[int]
+    last: int
+    res: ServeResult
+
+
+class _LaneBatch:
+    """A variant's fixed-width continuous batch: ``n_lanes`` resident
+    sequences sharing ONE stacked cache (lane axis 1), advanced by a single
+    vmapped decode dispatch per tick with a per-lane cache index.  Lane
+    shapes never change, so decode compiles exactly once per variant; a
+    finished lane's cache is simply overwritten at the next admission."""
+
+    def __init__(self, n_lanes: int):
+        self.n_lanes = n_lanes
+        self.lanes: list[_Lane | None] = [None] * n_lanes
+        self.caches = None           # allocated lazily at first admission
+
+    def free_lanes(self) -> list[int]:
+        return [i for i, l in enumerate(self.lanes) if l is None]
+
+    def active(self) -> list[tuple[int, _Lane]]:
+        return [(i, l) for i, l in enumerate(self.lanes) if l is not None]
+
+    def n_active(self) -> int:
+        return sum(1 for l in self.lanes if l is not None)
+
+
+# --------------------------------------------------------------------------
+# Jit function cache (shared across engine instances: an engine per genome
+# during serving-schedule search must not recompile the model)
+# --------------------------------------------------------------------------
+
+
+@lru_cache(maxsize=32)
+def _jitted(cfg):
+    """(prefill, decode) jitted for ``cfg``.  Decode is **vmapped over
+    lanes with a per-lane cache index**: all in-flight sequences advance in
+    ONE fixed-shape dispatch regardless of their (different) positions —
+    the core continuous-batching capability the lockstep path lacks."""
+    import jax
+
+    from ...models.transformer import decode_step, prefill
+    pre = jax.jit(lambda p, b: prefill(p, b, cfg))
+    dec = jax.jit(
+        jax.vmap(lambda p, tb, c, i: decode_step(p, tb, c, i, cfg),
+                 in_axes=(None, 0, 1, 0), out_axes=(0, 1)),
+        donate_argnums=(2,))
+    return pre, dec
+
+
+def _stack_lanes(caches: list[dict]):
+    """Per-sequence (B=1) caches stacked on a new lane axis (axis 1)."""
+    import jax
+    import jax.numpy as jnp
+    return jax.tree.map(lambda *xs: jnp.stack(xs, axis=1), *caches)
+
+
+def _write_lane(stacked: dict, lane: int, one: dict):
+    """Install one sequence's (B=1) cache into lane ``lane`` of the stacked
+    batch (a device-side single-lane copy; the only per-admission cache
+    traffic — decode itself never restacks)."""
+    import jax
+    return jax.tree.map(lambda full, x: full.at[:, lane].set(x),
+                        stacked, one)
+
+
+def _batch_axis_slice(caches: dict, i: int):
+    import jax
+    return jax.tree.map(lambda x: x[:, i:i + 1], caches)
+
+
+# --------------------------------------------------------------------------
+# The engine
+# --------------------------------------------------------------------------
+
+
+class ServeEngine:
+    """Continuous-batching serving over one model's parameters.
+
+    ``cfg`` is the default-route :class:`~repro.models.common.ModelConfig`;
+    ``evolved_cfg`` (optional, same parameter shapes) is the evolved route,
+    taking ``ab_fraction`` of unpinned requests.  ``params=None`` initializes
+    random weights (the smoke/demo path).  ``max_len`` bounds
+    ``prompt + generation`` per request; every slot cache is allocated at
+    ``max_len`` so any group of slots can decode together."""
+
+    def __init__(self, cfg, params=None, *, max_len: int = 128,
+                 max_slots: int = 4, prefill_chunk: int = 2,
+                 evolved_cfg=None, ab_fraction: float = 0.0,
+                 temperature: float = 0.0, seed: int = 0):
+        import jax
+        if cfg.family == "encoder":
+            raise ValueError("encoder-only arch has no decode step")
+        if max_slots < 1 or prefill_chunk < 1:
+            raise ValueError("max_slots and prefill_chunk must be >= 1")
+        self.cfgs = {"default": cfg}
+        if evolved_cfg is not None:
+            self.cfgs["evolved"] = evolved_cfg
+        self.ab_fraction = ab_fraction
+        self.max_len = max_len
+        self.max_slots = max_slots
+        self.prefill_chunk = prefill_chunk
+        self.temperature = temperature
+        self._route_rng = np.random.default_rng(seed)
+        self._sample_key = jax.random.PRNGKey(seed + 1)
+        if params is None:
+            from ...models.transformer import init_params
+            params = init_params(cfg, jax.random.PRNGKey(0))
+        self.params = params
+        self.queue: deque[ServeRequest] = deque()
+        self.batches = {v: _LaneBatch(max_slots) for v in self.cfgs}
+        self.completed: list[ServeResult] = []
+        self._t0: float | None = None
+        self._t_last: float = 0.0
+        self.n_ticks = 0
+        self.n_prefill_batches = 0
+        self.n_decode_batches = 0
+
+    # -- submission ----------------------------------------------------------
+    def submit(self, req: ServeRequest) -> None:
+        tokens = np.asarray(req.tokens, np.int32).reshape(-1)
+        if len(tokens) + req.max_new_tokens > self.max_len:
+            raise ValueError(
+                f"request {req.uid}: prompt {len(tokens)} + "
+                f"{req.max_new_tokens} new tokens exceeds max_len "
+                f"{self.max_len}")
+        if req.variant is not None and req.variant not in self.cfgs:
+            raise ValueError(f"request {req.uid}: unknown variant "
+                             f"{req.variant!r} (have {list(self.cfgs)})")
+        req.tokens = tokens
+        req._t_submit = _time.perf_counter()
+        self.queue.append(req)
+
+    def submit_many(self, reqs) -> None:
+        for r in reqs:
+            self.submit(r)
+
+    # -- routing -------------------------------------------------------------
+    def _route(self, req: ServeRequest) -> str:
+        if req.variant is not None:
+            return req.variant
+        if "evolved" in self.cfgs and \
+                self._route_rng.random() < self.ab_fraction:
+            return "evolved"
+        return "default"
+
+    # -- prefill (admission) -------------------------------------------------
+    def _token_batch(self, cfg, tokens_2d, positions_2d):
+        import jax.numpy as jnp
+        b = {"tokens": jnp.asarray(tokens_2d),
+             "positions": jnp.asarray(positions_2d)}
+        if cfg.mrope:
+            b["positions3"] = jnp.broadcast_to(
+                jnp.asarray(positions_2d)[:, :, None],
+                positions_2d.shape + (3,))
+        return b
+
+    def _n_in_flight(self) -> int:
+        return sum(b.n_active() for b in self.batches.values())
+
+    def _admit(self) -> None:
+        import jax
+
+        from ...models.transformer import init_cache
+        n_free = self.max_slots - self._n_in_flight()
+        n_take = min(n_free, self.prefill_chunk, len(self.queue))
+        if n_take <= 0:
+            return
+        admitted = [self.queue.popleft() for _ in range(n_take)]
+        t_admit = _time.perf_counter()
+        groups: dict[tuple, list[ServeRequest]] = {}
+        for req in admitted:
+            groups.setdefault((self._route(req), len(req.tokens)),
+                              []).append(req)
+        for (variant, plen), reqs in groups.items():
+            cfg = self.cfgs[variant]
+            batch = self.batches[variant]
+            pre_fn, _ = _jitted(cfg)
+            G = len(reqs)
+            toks = np.stack([r.tokens for r in reqs])
+            pos = np.broadcast_to(np.arange(plen, dtype=np.int32)[None],
+                                  (G, plen))
+            logits, pre_caches = pre_fn(self.params,
+                                        self._token_batch(cfg, toks, pos))
+            self.n_prefill_batches += 1
+            first = self._sample(logits)
+            t_first = _time.perf_counter()
+            if batch.caches is None:
+                batch.caches = _stack_lanes(
+                    [init_cache(cfg, 1, self.max_len)] * batch.n_lanes)
+            free = batch.free_lanes()
+            for i, req in enumerate(reqs):
+                full = init_cache(cfg, 1, self.max_len)
+                mine = _batch_axis_slice(pre_caches, i)
+
+                def splice(f, p, _plen=plen):
+                    if p.shape == f.shape:
+                        return p
+                    if (f.ndim >= 3 and p.ndim == f.ndim
+                            and p.shape[2] == _plen
+                            and f.shape[2] == self.max_len):
+                        return f.at[:, :, :_plen].set(p)
+                    return f
+                one = jax.tree.map(splice, full, mine)
+                tok = int(first[i])
+                res = ServeResult(
+                    uid=req.uid, variant=variant,
+                    t_submit=getattr(req, "_t_submit", t_admit),
+                    t_admit=t_admit, t_first=t_first)
+                lane = _Lane(req=req, index=plen, tokens=[tok], last=tok,
+                             res=res)
+                if not self._maybe_finish(lane, t_first):
+                    li = free.pop(0)
+                    batch.lanes[li] = lane
+                    batch.caches = _write_lane(batch.caches, li, one)
+
+    # -- decode --------------------------------------------------------------
+    def _sample(self, logits):
+        import jax
+        import jax.numpy as jnp
+        if self.temperature > 0:
+            self._sample_key, sub = jax.random.split(self._sample_key)
+            return np.asarray(jax.random.categorical(
+                sub, logits / self.temperature)).astype(np.int32)
+        return np.asarray(jnp.argmax(logits, -1)).astype(np.int32)
+
+    def _decode_tick(self) -> None:
+        import jax.numpy as jnp
+        for variant in sorted(self.batches):
+            batch = self.batches[variant]
+            active = batch.active()
+            if not active:
+                continue
+            cfg = self.cfgs[variant]
+            _, dec_fn = _jitted(cfg)
+            # ONE fixed-shape vmapped dispatch over every lane of this
+            # variant (idle lanes run at index 0 and are ignored; their
+            # cache is rewritten wholesale at the next admission)
+            N = batch.n_lanes
+            toks = np.zeros((N, 1, 1), np.int32)
+            pos = np.zeros((N, 1, 1), np.int32)
+            idx = np.zeros((N,), np.int32)
+            for i, lane in active:
+                toks[i, 0, 0] = lane.last
+                pos[i, 0, 0] = lane.index
+                idx[i] = lane.index
+            tb = {"tokens": jnp.asarray(toks),
+                  "positions": jnp.asarray(pos)}
+            if cfg.mrope:
+                tb["positions3"] = jnp.broadcast_to(
+                    jnp.asarray(pos)[..., None], (N, 1, 1, 3))
+            logits, batch.caches = dec_fn(self.params, tb, batch.caches,
+                                          jnp.asarray(idx))
+            self.n_decode_batches += 1
+            nxt = self._sample(logits[:, 0])
+            t_now = _time.perf_counter()
+            for i, lane in active:
+                lane.index += 1
+                tok = int(nxt[i])
+                lane.tokens.append(tok)
+                lane.last = tok
+                if self._maybe_finish(lane, t_now):
+                    batch.lanes[i] = None
+
+    def _maybe_finish(self, lane: _Lane, t_now: float) -> bool:
+        req = lane.req
+        done = (len(lane.tokens) >= req.max_new_tokens
+                or (req.eos_id is not None and lane.last == req.eos_id))
+        if done:
+            lane.res.tokens = list(lane.tokens)
+            lane.res.t_done = t_now
+            self.completed.append(lane.res)
+            self._t_last = t_now
+        return done
+
+    # -- the loop ------------------------------------------------------------
+    @property
+    def busy(self) -> bool:
+        return bool(self.queue) or self._n_in_flight() > 0
+
+    def step(self) -> None:
+        """One engine tick: admit + micro-batch prefill new requests, then
+        advance every in-flight sequence one decode step."""
+        if self._t0 is None:
+            self._t0 = _time.perf_counter()
+        self.n_ticks += 1
+        self._admit()
+        self._decode_tick()
+
+    def run(self, requests=None, *, stagger: int | None = None
+            ) -> list[ServeResult]:
+        """Drive to completion: optionally submit ``requests`` (all upfront,
+        or ``stagger`` per tick — arrivals mid-stream are what continuous
+        batching exists for), then tick until queue and slots drain.
+        Returns results in completion order."""
+        pending = deque(requests or [])
+        if stagger is None:
+            self.submit_many(pending)
+            pending.clear()
+        n_before = len(self.completed)
+        while pending or self.busy:
+            for _ in range(min(stagger or 0, len(pending))):
+                self.submit(pending.popleft())
+            self.step()
+        return self.completed[n_before:]
+
+    # -- stats + feedback ----------------------------------------------------
+    def stats(self) -> dict:
+        """Aggregate measured serving stats, overall and per variant."""
+        wall = (self._t_last - self._t0) if self._t0 else 0.0
+        out = {"n_completed": len(self.completed),
+               "wall_s": round(wall, 6),
+               "ticks": self.n_ticks,
+               "prefill_batches": self.n_prefill_batches,
+               "decode_batches": self.n_decode_batches,
+               "gen_tokens": sum(len(r.tokens) for r in self.completed),
+               "per_variant": {}}
+        out["throughput_tok_s"] = round(
+            out["gen_tokens"] / wall, 3) if wall > 0 else 0.0
+        for variant in self.cfgs:
+            rs = [r for r in self.completed if r.variant == variant]
+            if not rs:
+                continue
+            lat = np.array([r.latency for r in rs])
+            toks = sum(len(r.tokens) for r in rs)
+            out["per_variant"][variant] = {
+                "n": len(rs),
+                "gen_tokens": toks,
+                "mean_latency_s": round(float(lat.mean()), 6),
+                "p95_latency_s": round(float(np.percentile(lat, 95)), 6),
+                "mean_ttft_s": round(
+                    float(np.mean([r.ttft for r in rs])), 6),
+                "s_per_token": round(float(lat.sum() / max(toks, 1)), 6),
+            }
+        return out
+
+    def publish_stats(self, cache: FitnessCache, *, name: str, shape,
+                      run: str = "") -> list[str]:
+        """Feed measured per-variant serving fitness back into a shared
+        :class:`FitnessCache` as ``serve``-tagged records (fitness =
+        ``(s_per_token, mean_latency_s)``).  The key is a content hash of
+        the measurement configuration — arch, shape, variant, AND the
+        engine schedule — so measurements under different schedules never
+        collide; like every cache record, a key already present is left
+        untouched (first measurement wins), so pass a distinct ``run`` tag
+        to record repeated measurements of the same configuration.
+        Returns the keys of records actually added (empty if everything
+        was already recorded).  Searches warm-starting from the same store
+        see what deployment measured."""
+        if cache.writer is None:
+            cache.writer = "serve"
+        added = []
+        for variant, rec in self.stats()["per_variant"].items():
+            body = {"kind": "serve_latency", "name": name,
+                    "shape": shape_tag(shape), "variant": variant,
+                    "schedule": {"max_slots": self.max_slots,
+                                 "prefill_chunk": self.prefill_chunk},
+                    "run": run}
+            key = "serve:" + hashlib.sha256(
+                json.dumps(body, sort_keys=True).encode()).hexdigest()
+            if key in cache:
+                continue
+            cache.put(key, EvalOutcome(
+                fitness=(rec["s_per_token"], rec["mean_latency_s"])))
+            added.append(key)
+        return added
+
+
+# --------------------------------------------------------------------------
+# Reference paths + the serving-schedule search workload
+# --------------------------------------------------------------------------
+
+
+def oneshot_generate(cfg, params, prompts: np.ndarray, gen: int,
+                     max_len: int | None = None,
+                     temperature: float = 0.0) -> np.ndarray:
+    """The pre-engine one-shot behavior (batch prefill + lockstep decode of
+    equal-length prompts) for ``--oneshot`` demos and convenience tests.
+    Returns the ``(B, gen)`` continuation of ``prompts`` (greedy unless
+    ``temperature`` > 0).  Note this runs through :class:`ServeEngine`
+    itself — the engine-independent correctness oracle is the direct
+    ``models.transformer`` prefill/decode loop (see
+    ``tests/test_serve.py``)."""
+    engine = ServeEngine(cfg, params,
+                         max_len=max_len or (prompts.shape[1] + gen),
+                         max_slots=len(prompts),
+                         prefill_chunk=len(prompts),
+                         temperature=temperature)
+    reqs = [ServeRequest(uid=f"r{i}", tokens=p, max_new_tokens=gen)
+            for i, p in enumerate(prompts)]
+    results = {r.uid: r for r in engine.run(reqs)}
+    return np.array([results[f"r{i}"].tokens for i in range(len(prompts))],
+                    np.int32)
+
+
+def demo_trace(cfg, *, n_requests: int, prompt_len: int, gen: int,
+               seed: int = 0) -> list[ServeRequest]:
+    """A deterministic mixed-length request trace (prompt lengths alternate
+    ``prompt_len`` and ``prompt_len // 2``), shared by the CLI demo, the
+    serving A/B suite, and the serving-schedule search."""
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for i in range(n_requests):
+        plen = prompt_len if i % 2 == 0 else max(prompt_len // 2, 1)
+        reqs.append(ServeRequest(
+            uid=f"req{i:03d}",
+            tokens=rng.integers(0, cfg.vocab, plen).astype(np.int32),
+            max_new_tokens=gen))
+    return reqs
+
+
+def build_serve_workload(arch: str = "qwen3-0.6b", *, smoke: bool = True,
+                         n_requests: int = 8, prompt_len: int = 16,
+                         gen: int = 8, stagger: int = 2, seed: int = 0):
+    """The serving schedule as a GEVO scenario: genome = engine schedule
+    (``max_slots``, ``prefill_chunk``), fitness = measured
+    ``(s_per_token, mean_request_latency)`` from replaying a fixed request
+    trace through a fresh :class:`ServeEngine`.  Model compilation is shared
+    across genomes (``_jitted`` is cfg-keyed), so the search measures the
+    *schedule*, not recompilation."""
+    import jax
+
+    from ...configs import get_config, smoke_config
+    from ...models.transformer import init_params
+    from ..fitness import KernelWorkload
+    cfg = smoke_config(arch) if smoke else get_config(arch)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    space = serve_schedule_space(arch)
+    max_len = prompt_len + gen
+
+    def runner(genome: dict) -> tuple[float, float]:
+        engine = ServeEngine(cfg, params, max_len=max_len,
+                             max_slots=genome["max_slots"],
+                             prefill_chunk=genome["prefill_chunk"])
+        engine.run(demo_trace(cfg, n_requests=n_requests,
+                              prompt_len=prompt_len, gen=gen, seed=seed),
+                   stagger=stagger)
+        s = engine.stats()
+        per = s["per_variant"]["default"]
+        return (s["wall_s"] / max(s["gen_tokens"], 1),
+                per["mean_latency_s"])
+
+    return KernelWorkload(
+        name=f"serve/{arch}",
+        program=space.encode(DEFAULT_ENGINE_SCHEDULE),
+        space=space,
+        runner=runner,
+        time_mode="measured",
+        kind="serve")

@@ -127,7 +127,11 @@ def get_edit_op(kind: str) -> EditOp:
 
 
 def registered_ops() -> tuple[str, ...]:
-    """Names of all registered operators, sorted for determinism."""
+    """Names of every currently registered edit operator, sorted for
+    determinism — the vocabulary :class:`OperatorWeights` mixes over and
+    CLI ``--operators`` specs validate against.  Importing
+    :mod:`repro.core.edits` registers the six built-ins; ``@register_edit``
+    classes imported afterwards appear here too."""
     return tuple(sorted(_REGISTRY))
 
 

@@ -25,6 +25,15 @@ _FIELDS = ("proposed", "applied", "valid", "elite")
 
 
 class OperatorStats:
+    """Per-operator ``proposed`` / ``applied`` / ``valid`` / ``elite``
+    counters for one search run — the paper's Sec. 6 mutation analysis as
+    live counters.  The search loop increments them as candidates are
+    sampled, applied, evaluated, and selected; ``snapshot()`` rows land in
+    every ``SearchResult.history`` entry, and ``to_doc``/``from_doc``
+    round-trip them through checkpoints so resumed runs continue the
+    series.  Unseen operator kinds (late-registered customs) get rows on
+    first touch."""
+
     def __init__(self, names: Iterable[str] | None = None):
         names = registered_ops() if names is None else names
         self._c: dict[str, dict[str, int]] = {

@@ -81,6 +81,25 @@ class IslandResult:
     def cross_island_hits(self) -> int:
         return self.cache_stats.get("cross_island_hits", 0)
 
+    def to_front(self, origin: str = "islands"):
+        """The merged cross-island Pareto front as a deployable
+        :class:`~repro.core.deploy.ParetoFront` (each member's ``source``
+        is the contributing island's name)."""
+        from ..deploy.front import FrontMember, ParetoFront
+        from ..serialize import patch_doc
+        return ParetoFront.from_members(
+            (FrontMember(fitness=i.fitness, patch=tuple(patch_doc(i.patch)),
+                         source=src)
+             for i, src in zip(self.pareto, self.pareto_sources)),
+            origin=origin,
+            meta={"original_fitness": list(self.original_fitness),
+                  "islands": list(self.names),
+                  "cross_island_hits": self.cross_island_hits})
+
+    def export_front(self, path: str, origin: str = "islands") -> None:
+        """Write the merged front doc for the deployment layer."""
+        self.to_front(origin).export(path)
+
 
 class IslandOrchestrator:
     """Run ``len(specs)`` GevoML populations over one workload with periodic

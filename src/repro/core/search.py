@@ -54,6 +54,12 @@ from .serialize import (atomic_write_json, patch_doc, patch_from_doc,
 
 @dataclass(frozen=True)
 class Individual:
+    """One population member: an immutable :class:`Patch` (the genome —
+    the edit list that, applied to the workload's original program,
+    produces this variant) paired with its evaluated ``(time, error)``
+    fitness, both objectives minimized.  Hashable, so populations can be
+    de-duplicated by identity or by fitness."""
+
     patch: Patch
     fitness: tuple[float, float]  # (time, error) — minimized
 
@@ -64,6 +70,11 @@ class Individual:
 
 @dataclass
 class SearchResult:
+    """What a finished (or resumed) :class:`GevoML` run hands back: the
+    original program's fitness, the final population, its de-duplicated
+    Pareto front, and one history row per generation (best objectives,
+    evaluation/cache counters, per-operator stats, wall time)."""
+
     original_fitness: tuple[float, float]
     population: list[Individual]
     pareto: list[Individual]
@@ -78,6 +89,24 @@ class SearchResult:
     def operator_stats(self) -> dict:
         """Final per-operator proposed/valid/elite counters."""
         return self.history[-1]["operators"] if self.history else {}
+
+    def to_front(self, origin: str = "search"):
+        """This result's Pareto front as a deployable
+        :class:`~repro.core.deploy.ParetoFront` (members carry canonical
+        patch docs, so the deployment layer can re-apply winners without
+        the workload)."""
+        from .deploy.front import FrontMember, ParetoFront
+        return ParetoFront.from_members(
+            (FrontMember(fitness=i.fitness, patch=tuple(patch_doc(i.patch)),
+                         source=origin) for i in self.pareto),
+            origin=origin,
+            meta={"original_fitness": list(self.original_fitness),
+                  "generations": len(self.history)})
+
+    def export_front(self, path: str, origin: str = "search") -> None:
+        """Write the front doc ``ParetoFront.load`` (and the deploy CLI)
+        consume — the handoff from a finished search to deployment."""
+        self.to_front(origin).export(path)
 
 
 class GevoML:

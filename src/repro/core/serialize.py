@@ -128,17 +128,22 @@ def patch_key(fingerprint: str, patch) -> str:
 # --------------------------------------------------------------------------
 
 
-def atomic_write_json(path: str, doc: dict) -> None:
+def atomic_write_json(path: str, doc: dict, *, sort_keys: bool = False,
+                      indent: int | None = None) -> None:
     """Write a JSON doc so readers never observe a torn file: serialize to a
     sibling tmp file, then ``os.replace`` (atomic on POSIX).  Search
-    checkpoints and island manifests both go through this — a crash mid-write
-    leaves the previous snapshot intact."""
+    checkpoints, island manifests, and deployment artifacts all go through
+    this — a crash mid-write leaves the previous snapshot intact.
+
+    ``sort_keys=True`` makes the bytes a canonical function of the doc's
+    content (the artifact registry requires byte-identical re-exports);
+    ``indent`` trades compactness for a human-auditable file."""
     d = os.path.dirname(path)
     if d:
         os.makedirs(d, exist_ok=True)
     tmp = path + ".tmp"
     with open(tmp, "w") as f:
-        json.dump(doc, f)
+        json.dump(doc, f, sort_keys=sort_keys, indent=indent)
     os.replace(tmp, path)
 
 

@@ -170,6 +170,43 @@ def build_kernel_workload(kernel: str = "rmsnorm", *,
     )
 
 
+def kernel_artifact(kernel: str, genome: dict,
+                    fitness: tuple[float, float] | None = None,
+                    meta: dict | None = None):
+    """A deployable :class:`~repro.core.deploy.Artifact` for one evolved
+    kernel schedule, keyed by the kernel's evaluation shape — the form the
+    registry stores and ``resolve_kernel_schedule`` looks up."""
+    from ..core.deploy import Artifact
+    return Artifact(kind="kernel", name=kernel, shape=SHAPES[kernel],
+                    genome=dict(genome), fitness=fitness,
+                    meta=dict(meta or {}))
+
+
+def resolve_kernel_schedule(registry, kernel: str, shape=None) -> dict:
+    """The schedule a serving path should run ``kernel`` with: the
+    registry's winner for ``(kernel, shape)`` when one is registered (and
+    it decodes into the kernel's schedule space), else the shipped
+    ``BASELINES`` default.  ``registry=None`` short-circuits to the
+    default, so call sites can be unconditional."""
+    if registry is not None:
+        art = registry.resolve(kernel, shape or SHAPES[kernel],
+                               kind="kernel")
+        if art is not None:
+            space = kernel_space(kernel)
+            if space.contains(art.genome):
+                return dict(art.genome)
+    return dict(BASELINES[kernel])
+
+
+def scheduled_kernel_fn(kernel: str, registry=None, shape=None):
+    """The kernel as a callable scheduled by the registry:
+    ``fn(inputs_dict) -> output`` running the resolved winner schedule
+    (falling back to the shipped default).  This is the hook by which
+    kernel-schedule search winners reach execution paths."""
+    return _variant_fn(kernel, resolve_kernel_schedule(registry, kernel,
+                                                       shape))
+
+
 def evolve_kernel_schedule(workload, *, generations: int = 6,
                            pop_size: int = 10, seed: int = 0,
                            evaluator=None, verbose: bool = False,

@@ -1,93 +1,145 @@
-"""Serving launcher: batched prefill + token-by-token decode with KV/SSM
-caches for any decoder arch.
+"""Serving launcher: the continuous-batching :class:`ServeEngine` as a CLI.
+
+Replays a deterministic mixed-length request trace (staggered arrivals)
+through the engine for any decoder arch, optionally routing between the
+default model configuration and an evolved artifact resolved from an
+:class:`~repro.core.deploy.ArtifactRegistry`, and optionally publishing the
+measured per-variant latency into a shared fitness cache under the ``serve``
+writer tag.
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b --smoke \
-      --batch 4 --prompt-len 32 --gen 16
+      --requests 8 --prompt-len 24 --gen 8
+
+  # engine schedule + evolved route resolved from the artifact registry
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b --smoke \
+      --artifacts experiments/artifacts --variant ab --ab-fraction 0.5
+
+  # the pre-engine one-shot behavior (correctness oracle)
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b --smoke \
+      --oneshot --requests 4 --prompt-len 32 --gen 16
 """
 
 from __future__ import annotations
 
 import argparse
-import time
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen3-0.6b")
     ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=8,
+                    help="trace length (mixed prompt lengths)")
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--stagger", type=int, default=2,
+                    help="requests arriving per engine tick (0 = all "
+                         "upfront)")
+    ap.add_argument("--max-slots", type=int, default=None,
+                    help="in-flight sequences (default: registry serve "
+                         "artifact, else 2)")
+    ap.add_argument("--prefill-chunk", type=int, default=None,
+                    help="admissions micro-batched per tick")
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--artifacts", default=None,
+                    help="ArtifactRegistry directory (serve-schedule and "
+                         "plan artifacts)")
+    ap.add_argument("--variant", default="default",
+                    choices=("default", "evolved", "ab"),
+                    help="route requests to the default config, an evolved "
+                         "plan artifact, or an A/B mix")
+    ap.add_argument("--ab-fraction", type=float, default=0.5)
+    ap.add_argument("--plan-shape", default="decode_32k",
+                    help="shape key for resolving the plan artifact")
+    ap.add_argument("--cache", default=None,
+                    help="publish per-variant latency records into this "
+                         "FitnessCache (JSONL) under writer tag 'serve'")
+    ap.add_argument("--oneshot", action="store_true",
+                    help="pre-engine one-shot path: batch prefill + "
+                         "lockstep decode of --requests equal prompts")
     args = ap.parse_args()
 
-    import jax
-    import jax.numpy as jnp
     import numpy as np
 
     from ..configs import get_config, smoke_config
-    from ..models.transformer import (decode_step, init_cache, init_params,
-                                      prefill)
+    from ..core.deploy import (ArtifactRegistry, ServeEngine,
+                               apply_plan_artifact, demo_trace,
+                               engine_schedule_from, oneshot_generate)
+    from ..core.evaluator import FitnessCache
 
     cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
     if cfg.family == "encoder":
         raise SystemExit("encoder-only arch has no decode step")
-    B, P, G = args.batch, args.prompt_len, args.gen
-    params = init_params(cfg, jax.random.PRNGKey(0))
 
-    prompts = np.random.default_rng(0).integers(
-        0, cfg.vocab, (B, P)).astype(np.int32)
-    batch = {"tokens": jnp.asarray(prompts)}
-    if cfg.mrope:
-        batch["positions3"] = jnp.broadcast_to(
-            jnp.arange(P, dtype=jnp.int32)[None, :, None], (B, P, 3))
+    if args.oneshot:
+        rng = np.random.default_rng(0)
+        prompts = rng.integers(0, cfg.vocab,
+                               (args.requests, args.prompt_len)
+                               ).astype(np.int32)
+        gen = oneshot_generate(cfg, None, prompts, args.gen,
+                               temperature=args.temperature)
+        print(f"arch={cfg.name} oneshot batch={args.requests} "
+              f"prompt={args.prompt_len} generated={gen.shape[1]}")
+        for b in range(min(args.requests, 2)):
+            print(f"  seq{b}: {gen[b][:12].tolist()}...")
+        return
 
-    # prefill fills position 0..P-1 caches; decode continues from P
-    t0 = time.time()
-    prefill_fn = jax.jit(lambda p, b: prefill(p, b, cfg))
-    logits, pre_caches = prefill_fn(params, batch)
-    jax.block_until_ready(logits)
-    t_prefill = time.time() - t0
+    registry = ArtifactRegistry(args.artifacts) if args.artifacts else None
+    serve_art = plan_art = None
+    if registry is not None:
+        serve_art = registry.resolve(cfg.name, "smoke" if args.smoke
+                                     else "full", kind="serve")
+        plan_art = registry.resolve(cfg.name, args.plan_shape, kind="plan")
+    schedule = engine_schedule_from(serve_art)
+    if args.max_slots is not None:
+        schedule["max_slots"] = args.max_slots
+    if args.prefill_chunk is not None:
+        schedule["prefill_chunk"] = args.prefill_chunk
 
-    caches = init_cache(cfg, B, P + G)
-    # splice prefill caches into the serving cache at [0, P)
-    def splice(full, pre):
-        if full.ndim >= 3 and pre.ndim == full.ndim and \
-                pre.shape[2] == P and full.shape[2] == P + G:
-            return full.at[:, :, :P].set(pre)
-        return pre if pre.shape == full.shape else full
-    caches = jax.tree.map(splice, caches, pre_caches)
+    evolved_cfg, ab = None, 0.0
+    if args.variant in ("evolved", "ab"):
+        if plan_art is None:
+            raise SystemExit(
+                f"--variant {args.variant} needs a plan artifact for "
+                f"({cfg.name}, {args.plan_shape}); none registered under "
+                f"{args.artifacts or '--artifacts (not given)'}")
+        evolved_cfg = apply_plan_artifact(cfg, plan_art)
+        ab = 1.0 if args.variant == "evolved" else args.ab_fraction
 
-    decode_fn = jax.jit(
-        lambda p, tb, c, i: decode_step(p, tb, c, i, cfg),
-        donate_argnums=(2,))
+    engine = ServeEngine(cfg, max_len=args.prompt_len + args.gen,
+                         max_slots=schedule["max_slots"],
+                         prefill_chunk=schedule["prefill_chunk"],
+                         evolved_cfg=evolved_cfg, ab_fraction=ab,
+                         temperature=args.temperature)
+    trace = demo_trace(cfg, n_requests=args.requests,
+                       prompt_len=args.prompt_len, gen=args.gen)
+    results = engine.run(trace, stagger=args.stagger or None)
 
-    tok = jnp.argmax(logits, -1).astype(jnp.int32)
-    out_tokens = [tok]
-    key = jax.random.PRNGKey(1)
-    t0 = time.time()
-    for t in range(G - 1):
-        tb = {"tokens": tok[:, None],
-              "positions": jnp.full((B, 1), P + t, jnp.int32)}
-        if cfg.mrope:
-            tb["positions3"] = jnp.full((B, 1, 3), P + t, jnp.int32)
-        logits, caches = decode_fn(params, tb, caches, jnp.int32(P + t))
-        if args.temperature > 0:
-            key, sub = jax.random.split(key)
-            tok = jax.random.categorical(
-                sub, logits / args.temperature).astype(jnp.int32)
-        else:
-            tok = jnp.argmax(logits, -1).astype(jnp.int32)
-        out_tokens.append(tok)
-    jax.block_until_ready(tok)
-    t_decode = time.time() - t0
+    s = engine.stats()
+    print(f"arch={cfg.name} requests={len(results)} "
+          f"schedule={schedule} "
+          f"ticks={s['ticks']} prefill_batches={s['prefill_batches']} "
+          f"decode_batches={s['decode_batches']}")
+    print(f"wall={s['wall_s']:.2f}s throughput={s['throughput_tok_s']:.1f} "
+          f"tok/s")
+    for variant, rec in s["per_variant"].items():
+        print(f"  [{variant}] n={rec['n']} "
+              f"ttft={rec['mean_ttft_s'] * 1e3:.1f}ms "
+              f"latency={rec['mean_latency_s'] * 1e3:.1f}ms "
+              f"(p95 {rec['p95_latency_s'] * 1e3:.1f}ms) "
+              f"s/token={rec['s_per_token'] * 1e3:.1f}ms")
+    for r in results[:2]:
+        print(f"  {r.uid} [{r.variant}]: {r.tokens[:12]}...")
 
-    gen = np.stack([np.asarray(t) for t in out_tokens], axis=1)
-    print(f"arch={cfg.name} batch={B} prompt={P} generated={gen.shape[1]}")
-    print(f"prefill: {t_prefill*1e3:.1f} ms   decode: "
-          f"{t_decode/max(G-1,1)*1e3:.1f} ms/token")
-    for b in range(min(B, 2)):
-        print(f"  seq{b}: {gen[b][:12].tolist()}...")
+    if args.cache:
+        cache = FitnessCache(args.cache, writer="serve")
+        keys = engine.publish_stats(
+            cache, name=cfg.name,
+            shape={"prompt_len": args.prompt_len, "gen": args.gen,
+                   "smoke": args.smoke})
+        cache.close()
+        print(f"published {len(keys)} serve-tagged latency records to "
+              f"{args.cache}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,224 @@
+"""Deployment layer: ParetoFront constraint queries, the artifact registry's
+bit-exact round-trips, and the export hooks from search outputs."""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import GevoML
+from repro.core.deploy import (Artifact, ArtifactRegistry, FrontMember,
+                               ParetoFront, shape_tag)
+from repro.core.deploy.engine import (DEFAULT_ENGINE_SCHEDULE,
+                                      apply_plan_artifact,
+                                      engine_schedule_from)
+from repro.kernels.workloads import (BASELINES, kernel_artifact,
+                                     resolve_kernel_schedule)
+
+
+# A recorded front shaped like the paper's MobileNet result: best accuracy
+# 91.2% (error 0.088); the fastest member within the 2% accuracy relaxation
+# is the 90.43%-speedup variant at 89.3% (error 0.107).
+PAPER_FRONT = [
+    FrontMember(fitness=(10.0, 0.088), source="a"),
+    FrontMember(fitness=(4.0, 0.100), source="b"),
+    FrontMember(fitness=(0.957, 0.107), source="c"),
+    FrontMember(fitness=(0.5, 0.300), source="d"),
+]
+
+
+class TestParetoFrontSelect:
+    def test_paper_rule(self):
+        """min time s.t. error <= best_error + 0.02 -> the 2%-relaxation
+        winner, not the outright-fastest member."""
+        f = ParetoFront.from_members(PAPER_FRONT)
+        m = f.select("time", within=0.02)
+        assert m.fitness == (0.957, 0.107)
+        assert m.source == "c"
+
+    def test_unconstrained_is_argmin(self):
+        f = ParetoFront.from_members(PAPER_FRONT)
+        assert f.best("time").fitness == (0.5, 0.300)
+        assert f.best("error").fitness == (10.0, 0.088)
+        assert f.select("time").fitness == (0.5, 0.300)
+
+    def test_relative_slack(self):
+        f = ParetoFront.from_members(PAPER_FRONT)
+        # 0.088 * 1.25 = 0.11 -> same winner; * 1.15 = 0.1012 excludes it
+        assert f.select("time", within=0.25, relative=True).source == "c"
+        assert f.select("time", within=0.15, relative=True).source == "b"
+
+    def test_absolute_limit(self):
+        f = ParetoFront.from_members(PAPER_FRONT)
+        assert f.select("time", limit=0.105).source == "b"
+        # limit tightens a looser slack
+        assert f.select("time", within=0.5, limit=0.09).source == "a"
+
+    def test_infeasible_raises(self):
+        f = ParetoFront.from_members(PAPER_FRONT)
+        with pytest.raises(ValueError, match="no front member"):
+            f.select("time", limit=0.01)
+
+    def test_unknown_objective(self):
+        f = ParetoFront.from_members(PAPER_FRONT)
+        with pytest.raises(KeyError):
+            f.select("latency")
+
+    def test_prune_drops_dominated(self):
+        dominated = FrontMember(fitness=(11.0, 0.5))
+        f = ParetoFront.from_members(PAPER_FRONT + [dominated])
+        assert all(m.fitness != (11.0, 0.5) for m in f)
+        kept = ParetoFront.from_members(PAPER_FRONT + [dominated],
+                                        prune=False)
+        assert len(kept) == len(PAPER_FRONT) + 1
+
+
+class TestFrontIO:
+    def test_export_load_round_trip(self, tmp_path):
+        f = ParetoFront.from_members(PAPER_FRONT, origin="unit",
+                                     meta={"note": 1})
+        p = str(tmp_path / "front.json")
+        f.export(p)
+        g = ParetoFront.load(p)
+        assert [m.fitness for m in g] == [m.fitness for m in f]
+        assert g.origin == "unit" and g.meta == {"note": 1}
+
+    def test_load_autotune_result(self, tmp_path):
+        doc = {"arch": "qwen3-0.6b", "shape": "train_4k",
+               "pareto": [{"genome": {"remat": "none"},
+                           "fitness": [1.0, 2.0], "patch": "<original>"},
+                          {"genome": {"remat": "full"},
+                           "fitness": [0.5, 3.0], "patch": "attr_tweak"}]}
+        p = str(tmp_path / "autotune.json")
+        json.dump(doc, open(p, "w"))
+        f = ParetoFront.load(p)
+        assert len(f) == 2
+        assert f.best("time").genome == {"remat": "full"}
+        assert f.meta["arch"] == "qwen3-0.6b"
+
+    def test_load_unrecognized(self, tmp_path):
+        p = str(tmp_path / "x.json")
+        json.dump({"what": "ever"}, open(p, "w"))
+        with pytest.raises(ValueError, match="unrecognized"):
+            ParetoFront.load(p)
+
+    def test_load_gevoml_checkpoint_and_to_front(self, tmp_path):
+        from repro.workloads.twofc import build_twofc_training_workload
+        w = build_twofc_training_workload(batch=16, hidden=8, steps=2,
+                                          n_train=64, n_test=64)
+        ck = str(tmp_path / "ck")
+        with GevoML(w, pop_size=4, n_elite=2, seed=0,
+                    checkpoint_dir=ck) as s:
+            res = s.run(generations=1)
+        # the in-memory hook and the on-disk checkpoint agree
+        f_mem = res.to_front(origin="mem")
+        f_ck = ParetoFront.load(os.path.join(ck, "latest.json"))
+        assert {m.fitness for m in f_mem} == {m.fitness for m in f_ck}
+        # members carry re-appliable patch docs
+        member = f_mem.best("time")
+        assert member.patch is not None
+        # the constrained selection runs on real search output
+        sel = f_mem.select("time", within=0.5)
+        assert sel.fitness[1] <= f_mem.best("error").fitness[1] + 0.5
+
+
+class TestArtifactRegistry:
+    def art(self):
+        return Artifact(kind="kernel", name="rmsnorm",
+                        shape={"rows": 512, "d": 512},
+                        genome={"impl": "pallas", "block_rows": 256,
+                                "epilogue": "fused"},
+                        fitness=(1.2e-6, 0.0), meta={"src": "unit"})
+
+    def test_round_trip_byte_identical(self, tmp_path):
+        reg = ArtifactRegistry(str(tmp_path / "arts"))
+        p1 = reg.export(self.art())
+        b1 = open(p1, "rb").read()
+        resolved = reg.resolve("rmsnorm", {"rows": 512, "d": 512},
+                               kind="kernel")
+        assert resolved.genome == self.art().genome
+        assert resolved.fitness == (1.2e-6, 0.0)
+        p2 = reg.export(resolved)
+        assert p2 == p1
+        assert open(p2, "rb").read() == b1
+
+    def test_resolve_misses_return_none(self, tmp_path):
+        reg = ArtifactRegistry(str(tmp_path / "arts"))
+        reg.export(self.art())
+        assert reg.resolve("rmsnorm", {"rows": 1024, "d": 512}) is None
+        assert reg.resolve("flash_attention", {"rows": 512, "d": 512}) is None
+
+    def test_fingerprint_detects_tamper(self, tmp_path):
+        reg = ArtifactRegistry(str(tmp_path / "arts"))
+        p = reg.export(self.art())
+        doc = json.load(open(p))
+        doc["genome"]["block_rows"] = 128
+        json.dump(doc, open(p, "w"))
+        with pytest.raises(ValueError, match="fingerprint mismatch"):
+            reg.resolve("rmsnorm", {"rows": 512, "d": 512})
+
+    def test_shape_tag_forms_agree(self, tmp_path):
+        reg = ArtifactRegistry(str(tmp_path / "arts"))
+        reg.export(self.art())
+        tag = shape_tag({"rows": 512, "d": 512})
+        assert reg.resolve("rmsnorm", tag) is not None
+
+    def test_list_and_kinds(self, tmp_path):
+        reg = ArtifactRegistry(str(tmp_path / "arts"))
+        reg.export(self.art())
+        reg.export(Artifact(kind="serve", name="qwen3-0.6b", shape="smoke",
+                            genome={"max_slots": 8, "prefill_chunk": 4}))
+        assert len(reg.list()) == 2
+        assert [a.kind for a in reg.list(kind="serve")] == ["serve"]
+
+    def test_unknown_kind_rejected(self):
+        with pytest.raises(ValueError, match="unknown artifact kind"):
+            Artifact(kind="nope", name="x", shape="y", genome={})
+
+
+class TestKernelArtifacts:
+    def test_resolve_falls_back_to_baseline(self, tmp_path):
+        reg = ArtifactRegistry(str(tmp_path / "arts"))
+        assert resolve_kernel_schedule(reg, "rmsnorm") == \
+            BASELINES["rmsnorm"]
+        assert resolve_kernel_schedule(None, "mamba_scan") == \
+            BASELINES["mamba_scan"]
+
+    def test_registered_winner_resolves(self, tmp_path):
+        reg = ArtifactRegistry(str(tmp_path / "arts"))
+        winner = {"impl": "pallas", "block_rows": 512, "epilogue": "fused"}
+        reg.export(kernel_artifact("rmsnorm", winner, fitness=(1e-6, 0.0)))
+        assert resolve_kernel_schedule(reg, "rmsnorm") == winner
+
+    def test_out_of_space_winner_ignored(self, tmp_path):
+        reg = ArtifactRegistry(str(tmp_path / "arts"))
+        reg.export(kernel_artifact("rmsnorm", {"impl": "pallas",
+                                               "block_rows": 7,
+                                               "epilogue": "fused"}))
+        assert resolve_kernel_schedule(reg, "rmsnorm") == \
+            BASELINES["rmsnorm"]
+
+
+class TestPlanArtifacts:
+    def test_apply_plan_artifact_filters_serve_keys(self):
+        from repro.configs import smoke_config
+        cfg = smoke_config("qwen3-0.6b")
+        art = Artifact(kind="plan", name=cfg.name, shape="decode_32k",
+                       genome={"attn_impl": "blockwise", "attn_block": 8,
+                               "remat": "full", "loss_chunk": 512})
+        cfg2 = apply_plan_artifact(cfg, art)
+        assert cfg2.attn_impl == "blockwise" and cfg2.attn_block == 8
+        # training-only knobs must not leak into the serving config
+        assert cfg2.remat == cfg.remat
+        assert cfg2.loss_chunk == cfg.loss_chunk
+        assert apply_plan_artifact(cfg, None) is cfg
+
+    def test_engine_schedule_from(self):
+        assert engine_schedule_from(None) == DEFAULT_ENGINE_SCHEDULE
+        art = Artifact(kind="serve", name="x", shape="smoke",
+                       genome={"max_slots": 8})
+        sched = engine_schedule_from(art)
+        assert sched["max_slots"] == 8
+        assert sched["prefill_chunk"] == \
+            DEFAULT_ENGINE_SCHEDULE["prefill_chunk"]

@@ -1,0 +1,104 @@
+"""Golden tests: benchmarks/report.py --experiments table regeneration from
+fixture experiments/perf/*.json records — the tables EXPERIMENTS.md quotes
+must be a pure function of the recorded jsons."""
+
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks.report import perf_cell_table, suite_headlines  # noqa: E402
+
+
+def _write(d, name, doc):
+    json.dump(doc, open(os.path.join(d, name), "w"))
+
+
+def _cell(status, step_s):
+    rec = {"status": status}
+    if status == "ok":
+        rec["roofline"] = {"step_s": step_s}
+    return rec
+
+
+class TestPerfCellTable:
+    def test_golden(self, tmp_path, capsys):
+        d = str(tmp_path)
+        _write(d, "alpha_0_baseline.json", _cell("ok", 2.0))
+        _write(d, "alpha_1_fix.json", _cell("ok", 1.0))
+        _write(d, "alpha_2_worse.json", _cell("ok", 3.0))
+        perf_cell_table(d)
+        out = capsys.readouterr().out.splitlines()
+        assert out == [
+            "| cell | iterations | baseline step s | best step s | "
+            "best iteration | speedup |",
+            "|---|---|---|---|---|---|",
+            "| alpha | 3 | 2.000 | 1.000 | 1: fix | 2.00x |",
+        ]
+
+    def test_failed_baseline_never_misreports_speedup(self, tmp_path,
+                                                      capsys):
+        d = str(tmp_path)
+        _write(d, "beta_0_base.json", _cell("fail", None))
+        _write(d, "beta_1_patch.json", _cell("ok", 1.0))
+        perf_cell_table(d)
+        out = capsys.readouterr().out.splitlines()
+        assert out[2] == "| beta | 2 | FAIL | | 1 | |"
+
+    def test_empty_dir_says_so(self, tmp_path, capsys):
+        perf_cell_table(str(tmp_path))
+        assert "no <cell>_<n>_<desc>.json records" in capsys.readouterr().out
+
+    def test_non_cell_jsons_ignored(self, tmp_path, capsys):
+        d = str(tmp_path)
+        _write(d, "evaluator_ab.json", {"whatever": 1})
+        perf_cell_table(d)
+        assert "no <cell>_<n>_<desc>.json" in capsys.readouterr().out
+
+
+class TestSuiteHeadlines:
+    def test_golden(self, tmp_path, capsys):
+        d = str(tmp_path)
+        _write(d, "evaluator_ab.json",
+               {"workers": 2, "speedup_parallel_vs_serial": 1.5,
+                "parallel_warm_cache": {"n_evals": 0}})
+        _write(d, "serving_ab.json",
+               {"evolved": {"schedule": {"max_slots": 8,
+                                         "prefill_chunk": 4},
+                            "throughput_tok_s": 1060.8},
+                "default": {"throughput_tok_s": 651.1},
+                "throughput_ratio_evolved_vs_default": 1.629,
+                "serve_cache_records": 2})
+        suite_headlines(d)
+        out = capsys.readouterr().out.splitlines()
+        assert out == [
+            "",
+            "| suite | headline |",
+            "|---|---|",
+            "| evaluator | parallel x2 = 1.5x vs serial; warm-cache rerun "
+            "= 0 re-evals |",
+            "| serving | evolved serving artifact (max_slots=8, "
+            "prefill_chunk=4) = 1.629x throughput vs the default schedule "
+            "(1061 vs 651 tok/s; 2 serve-tagged cache records) |",
+        ]
+
+    def test_no_records(self, tmp_path, capsys):
+        suite_headlines(str(tmp_path))
+        assert "(none)" in capsys.readouterr().out
+
+    def test_repo_records_render(self, capsys):
+        """Whatever records exist under experiments/perf must render without
+        falling through to "(none)" — EXPERIMENTS.md points readers at this
+        exact command.  (experiments/ is regenerable and gitignored, so a
+        fresh checkout legitimately has none.)"""
+        import pytest
+        repo_perf = os.path.join(os.path.dirname(__file__), "..",
+                                 "experiments", "perf")
+        if not os.path.exists(os.path.join(repo_perf, "serving_ab.json")):
+            pytest.skip("no recorded serving_ab.json in this checkout "
+                        "(regenerate: perf_ab --suite serving)")
+        suite_headlines(repo_perf)
+        out = capsys.readouterr().out
+        assert "| serving |" in out
+        assert "(none)" not in out

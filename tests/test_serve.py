@@ -1,0 +1,254 @@
+"""First serving coverage: the continuous-batching ServeEngine against the
+one-shot/unbatched oracle, registry-routed variants, and the serve-tagged
+latency feedback into the shared FitnessCache."""
+
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import smoke_config
+from repro.core.deploy import (Artifact, ArtifactRegistry, ServeEngine,
+                               ServeRequest, demo_trace, oneshot_generate,
+                               serve_schedule_space)
+from repro.core.evaluator import FitnessCache
+from repro.models.transformer import init_params
+
+
+@pytest.fixture(scope="module")
+def qwen():
+    cfg = smoke_config("qwen3-0.6b")
+    return cfg, init_params(cfg, jax.random.PRNGKey(0))
+
+
+def _prompts(cfg, lens, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, cfg.vocab, n).astype(np.int32) for n in lens]
+
+
+def _direct_generate(cfg, params, prompt: np.ndarray, gen: int
+                     ) -> list[int]:
+    """Engine-independent oracle: the direct models.transformer prefill +
+    lockstep decode_step loop (the pre-ServeEngine launcher's algorithm),
+    B=1, greedy.  Deliberately shares NO code with core.deploy.engine."""
+    import jax.numpy as jnp
+
+    from repro.models.transformer import (decode_step, init_cache, prefill)
+    P, G = len(prompt), gen
+    batch = {"tokens": jnp.asarray(prompt[None, :])}
+    logits, pre_caches = prefill(params, batch, cfg)
+    caches = init_cache(cfg, 1, P + G)
+
+    def splice(full, pre):
+        if full.ndim >= 3 and pre.ndim == full.ndim and \
+                pre.shape[2] == P and full.shape[2] == P + G:
+            return full.at[:, :, :P].set(pre)
+        return pre if pre.shape == full.shape else full
+    caches = jax.tree.map(splice, caches, pre_caches)
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    out = [int(tok[0])]
+    for t in range(G - 1):
+        tb = {"tokens": tok[:, None],
+              "positions": jnp.full((1, 1), P + t, jnp.int32)}
+        logits, caches = decode_step(params, tb, caches, jnp.int32(P + t),
+                                     cfg)
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        out.append(int(tok[0]))
+    return out
+
+
+class TestEngineCorrectness:
+    def test_engine_matches_direct_model_loop(self, qwen):
+        """The engine (continuous batching, lane caches, vmapped decode)
+        must be bit-identical to the direct models.transformer
+        prefill/decode loop — an oracle that shares no serving code."""
+        cfg, params = qwen
+        prompts = _prompts(cfg, (8, 4, 8), seed=9)
+        gen = 5
+        refs = [_direct_generate(cfg, params, p, gen) for p in prompts]
+        eng = ServeEngine(cfg, params, max_len=16, max_slots=2,
+                          prefill_chunk=1)
+        reqs = [ServeRequest(uid=f"r{i}", tokens=p, max_new_tokens=gen)
+                for i, p in enumerate(prompts)]
+        res = {r.uid: r for r in eng.run(reqs, stagger=1)}
+        for i, ref in enumerate(refs):
+            assert res[f"r{i}"].tokens == ref, \
+                f"request {i} diverged from the direct model loop"
+
+    def test_continuous_matches_unbatched(self, qwen):
+        """Staggered arrivals, mixed prompt lengths, shared lanes — every
+        request's greedy continuation must be bit-identical to running it
+        alone through the unbatched (B=1 one-shot) path."""
+        cfg, params = qwen
+        prompts = _prompts(cfg, (8, 4, 8, 4, 8))
+        gen = 5
+        refs = [oneshot_generate(cfg, params, p[None, :], gen)[0].tolist()
+                for p in prompts]
+        eng = ServeEngine(cfg, params, max_len=16, max_slots=3,
+                          prefill_chunk=2)
+        reqs = [ServeRequest(uid=f"r{i}", tokens=p, max_new_tokens=gen)
+                for i, p in enumerate(prompts)]
+        res = {r.uid: r for r in eng.run(reqs, stagger=2)}
+        for i, ref in enumerate(refs):
+            assert res[f"r{i}"].tokens == ref, f"request {i} diverged"
+
+    def test_prefill_micro_batching_matches(self, qwen):
+        """All-upfront admission (prefill batches of several prompts) gives
+        the same tokens as one-at-a-time admission."""
+        cfg, params = qwen
+        prompts = _prompts(cfg, (6, 6, 6, 6), seed=1)
+        gen = 4
+
+        def run(chunk, slots):
+            eng = ServeEngine(cfg, params, max_len=10, max_slots=slots,
+                              prefill_chunk=chunk)
+            reqs = [ServeRequest(uid=f"r{i}", tokens=p, max_new_tokens=gen)
+                    for i, p in enumerate(prompts)]
+            return {r.uid: r.tokens for r in eng.run(reqs)}
+
+        assert run(4, 4) == run(1, 1)
+
+    def test_decode_interleaves_prefill(self, qwen):
+        """With more requests than slots, later requests are admitted while
+        earlier ones are mid-decode — and still match the oracle."""
+        cfg, params = qwen
+        prompts = _prompts(cfg, (8, 8, 8, 8, 8, 8), seed=2)
+        gen = 6
+        eng = ServeEngine(cfg, params, max_len=16, max_slots=2,
+                          prefill_chunk=1)
+        reqs = [ServeRequest(uid=f"r{i}", tokens=p, max_new_tokens=gen)
+                for i, p in enumerate(prompts)]
+        out = eng.run(reqs)
+        assert len(out) == len(prompts)
+        ref = oneshot_generate(cfg, params, prompts[-1][None, :], gen)[0]
+        last = next(r for r in out if r.uid == f"r{len(prompts) - 1}")
+        assert last.tokens == ref.tolist()
+        # interleaving really happened: decode dispatches < requests * gen
+        assert eng.stats()["decode_batches"] < len(prompts) * gen
+
+    def test_eos_stops_early(self, qwen):
+        cfg, params = qwen
+        (p,) = _prompts(cfg, (8,), seed=3)
+        ref = oneshot_generate(cfg, params, p[None, :], 6)[0].tolist()
+        eos = ref[2]
+        eng = ServeEngine(cfg, params, max_len=16, max_slots=1,
+                          prefill_chunk=1)
+        out = eng.run([ServeRequest(uid="r", tokens=p, max_new_tokens=6,
+                                    eos_id=eos)])
+        # stops at eos's FIRST occurrence (which may precede index 2)
+        assert out[0].tokens == ref[:ref.index(eos) + 1]
+
+    def test_submit_validates(self, qwen):
+        cfg, params = qwen
+        eng = ServeEngine(cfg, params, max_len=8)
+        with pytest.raises(ValueError, match="exceeds max_len"):
+            eng.submit(ServeRequest(uid="big", tokens=np.zeros(6, np.int32),
+                                    max_new_tokens=4))
+        with pytest.raises(ValueError, match="unknown variant"):
+            eng.submit(ServeRequest(uid="v", tokens=np.zeros(2, np.int32),
+                                    max_new_tokens=2, variant="evolved"))
+
+
+class TestVariantRouting:
+    def test_ab_routes_both_variants(self, qwen):
+        cfg, params = qwen
+        evolved = cfg.scaled(attn_impl="blockwise", attn_block=8)
+        eng = ServeEngine(cfg, params, max_len=12, max_slots=4,
+                          prefill_chunk=2, evolved_cfg=evolved,
+                          ab_fraction=0.5, seed=7)
+        reqs = [ServeRequest(uid=f"r{i}", tokens=p, max_new_tokens=3)
+                for i, p in enumerate(_prompts(cfg, (8,) * 8, seed=4))]
+        out = eng.run(reqs, stagger=3)
+        variants = {r.variant for r in out}
+        assert variants == {"default", "evolved"}
+        per = eng.stats()["per_variant"]
+        assert per["default"]["n"] + per["evolved"]["n"] == 8
+
+    def test_pinned_variant_wins_over_fraction(self, qwen):
+        cfg, params = qwen
+        evolved = cfg.scaled(attn_impl="blockwise", attn_block=8)
+        eng = ServeEngine(cfg, params, max_len=12, max_slots=2,
+                          prefill_chunk=2, evolved_cfg=evolved,
+                          ab_fraction=1.0)
+        (p,) = _prompts(cfg, (8,), seed=5)
+        out = eng.run([ServeRequest(uid="pin", tokens=p, max_new_tokens=2,
+                                    variant="default")])
+        assert out[0].variant == "default"
+
+
+class TestServeFeedback:
+    def test_latency_records_serve_tagged(self, qwen, tmp_path):
+        """Engine stats land in a shared FitnessCache as writer='serve'
+        records, countable as cross-writer hits by other readers."""
+        cfg, params = qwen
+        eng = ServeEngine(cfg, params, max_len=12, max_slots=2,
+                          prefill_chunk=1)
+        eng.run(demo_trace(cfg, n_requests=3, prompt_len=8, gen=3),
+                stagger=1)
+        path = str(tmp_path / "cache.jsonl")
+        cache = FitnessCache(path, writer="serve")
+        keys = eng.publish_stats(cache, name=cfg.name,
+                                 shape={"prompt_len": 8, "gen": 3},
+                                 run="unit")
+        cache.close()
+        assert keys and all(k.startswith("serve:") for k in keys)
+        recs = [json.loads(line) for line in open(path)]
+        assert len(recs) == len(keys)
+        for rec in recs:
+            assert rec["writer"] == "serve"
+            t_tok, lat = rec["fitness"]
+            assert t_tok > 0 and lat > 0
+        # another engine-stack component reading the shared store sees the
+        # serving fleet's record as a cross-writer hit
+        reader = FitnessCache(path, writer="search")
+        assert reader.get(keys[0]) is not None
+        assert reader.cross_hits == 1
+        reader.close()
+
+    def test_publish_dedupes_and_keys_on_schedule(self, qwen, tmp_path):
+        cfg, params = qwen
+        eng = ServeEngine(cfg, params, max_len=12)
+        eng.run(demo_trace(cfg, n_requests=2, prompt_len=6, gen=2))
+        path = str(tmp_path / "cache.jsonl")
+        cache = FitnessCache(path, writer="serve")
+        k1 = eng.publish_stats(cache, name=cfg.name, shape="s", run="r1")
+        # same configuration again: already recorded, nothing published
+        k2 = eng.publish_stats(cache, name=cfg.name, shape="s", run="r1")
+        # a distinct run tag records a fresh measurement
+        k3 = eng.publish_stats(cache, name=cfg.name, shape="s", run="r2")
+        # a different engine schedule must never collide with k1's key
+        eng2 = ServeEngine(cfg, params, max_len=12, max_slots=8,
+                           prefill_chunk=4)
+        eng2.run(demo_trace(cfg, n_requests=2, prompt_len=6, gen=2))
+        k4 = eng2.publish_stats(cache, name=cfg.name, shape="s", run="r1")
+        cache.close()
+        assert k1 and k2 == [] and k3 and k4
+        assert not (set(k1) & set(k3)) and not (set(k1) & set(k4))
+        assert len(open(path).readlines()) == len(k1) + len(k3) + len(k4)
+
+
+class TestServeSearchSurface:
+    def test_schedule_space_contains_default(self):
+        from repro.core.deploy.engine import DEFAULT_ENGINE_SCHEDULE
+        space = serve_schedule_space("qwen3-0.6b")
+        assert space.contains(DEFAULT_ENGINE_SCHEDULE)
+        assert space.size() == 12
+
+    def test_registry_routed_engine(self, qwen, tmp_path):
+        """A serve artifact resolved from the registry configures the
+        engine (the deployment round trip at smoke scale)."""
+        from repro.core.deploy import engine_schedule_from
+        cfg, params = qwen
+        reg = ArtifactRegistry(str(tmp_path / "arts"))
+        reg.export(Artifact(kind="serve", name=cfg.name, shape="smoke",
+                            genome={"max_slots": 4, "prefill_chunk": 2}))
+        art = reg.resolve(cfg.name, "smoke", kind="serve")
+        sched = engine_schedule_from(art)
+        eng = ServeEngine(cfg, params, max_len=12,
+                          max_slots=sched["max_slots"],
+                          prefill_chunk=sched["prefill_chunk"])
+        out = eng.run(demo_trace(cfg, n_requests=4, prompt_len=8, gen=3),
+                      stagger=2)
+        assert len(out) == 4
+        assert eng.max_slots == 4

@@ -1,0 +1,95 @@
+"""Docs link-and-command checker (the CI docs job).
+
+Over the repo's user-facing markdown (README, DESIGN, EXPERIMENTS, ROADMAP,
+docs/*.md), verifies that:
+
+* every **relative link** ``[text](path)`` resolves to an existing file or
+  directory (anchors are stripped; http(s)/mailto links are skipped), and
+* every **referenced command entry point** exists: ``python -m pkg.mod``
+  resolves to a module under ``src/`` or the repo root, and
+  ``python <path>.py`` scripts exist.
+
+Exits non-zero listing every broken reference, so stale docs fail CI the
+same way broken imports do.
+
+    python tools/check_docs.py
+"""
+
+from __future__ import annotations
+
+import glob
+import os
+import re
+import sys
+
+ROOT = os.path.normpath(os.path.join(os.path.dirname(__file__), ".."))
+
+DOC_GLOBS = ("README.md", "DESIGN.md", "EXPERIMENTS.md", "ROADMAP.md",
+             "PAPER.md", "docs/*.md")
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+MODULE_RE = re.compile(r"python\s+(?:-W\S+\s+)?-m\s+([A-Za-z0-9_.]+)")
+SCRIPT_RE = re.compile(r"python\s+((?:[A-Za-z0-9_./-]+/)?[A-Za-z0-9_.-]+\.py)")
+
+
+def doc_files() -> list[str]:
+    out = []
+    for pat in DOC_GLOBS:
+        out.extend(sorted(glob.glob(os.path.join(ROOT, pat))))
+    return out
+
+
+# third-party tools docs legitimately invoke with `python -m`
+EXTERNAL_MODULES = {"pytest", "pip"}
+
+
+def module_exists(mod: str) -> bool:
+    if mod.split(".", 1)[0] in EXTERNAL_MODULES:
+        return True
+    rel = mod.replace(".", os.sep)
+    for base in (os.path.join(ROOT, "src"), ROOT):
+        if os.path.exists(os.path.join(base, rel + ".py")) or \
+                os.path.exists(os.path.join(base, rel, "__init__.py")) or \
+                os.path.exists(os.path.join(base, rel, "__main__.py")):
+            return True
+    return False
+
+
+def check_file(path: str) -> list[str]:
+    errors = []
+    text = open(path).read()
+    rel = os.path.relpath(path, ROOT)
+    for target in LINK_RE.findall(text):
+        if target.startswith(("http://", "https://", "mailto:", "#")):
+            continue
+        resolved = os.path.normpath(
+            os.path.join(os.path.dirname(path), target.split("#", 1)[0]))
+        if not os.path.exists(resolved):
+            errors.append(f"{rel}: broken link -> {target}")
+    for mod in MODULE_RE.findall(text):
+        if not module_exists(mod):
+            errors.append(f"{rel}: missing module entry point -> "
+                          f"python -m {mod}")
+    for script in SCRIPT_RE.findall(text):
+        if not os.path.exists(os.path.join(ROOT, script)):
+            errors.append(f"{rel}: missing script -> python {script}")
+    return errors
+
+
+def main() -> int:
+    files = doc_files()
+    errors = []
+    for f in files:
+        errors.extend(check_file(f))
+    print(f"checked {len(files)} markdown files")
+    for e in errors:
+        print(f"  BROKEN  {e}")
+    if errors:
+        print(f"{len(errors)} broken doc reference(s)")
+        return 1
+    print("all links and referenced entry points resolve")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
