@@ -1,7 +1,7 @@
 """§Perf A/B measurements.
 
-Six suites (select with
-``--suite {cells,evaluator,operators,kernels,islands,serving,all}``):
+Seven suites (select with
+``--suite {cells,evaluator,operators,kernels,islands,serving,tensor_evo,all}``):
 
 * ``cells`` (default) — for each hillclimbed model cell, measures (under the
   FINAL roofline analyzer, so numbers are comparable) the paper-faithful
@@ -43,12 +43,21 @@ Six suites (select with
   on the same staggered request trace, writing
   experiments/perf/serving_ab.json (results quoted in EXPERIMENTS.md).
 
+* ``tensor_evo`` — A/Bs the tensorized on-device engine against the Python
+  engine on the joint three-kernel schedule space: population-evals/sec of
+  ``TensorGevoML`` at pop 1024 vs ``GevoML(engine="python")``, then reruns
+  the islands-vs-panmictic comparison at >= 100x the PR-4 genome budget
+  (4 mesh islands x pop 1024 x 4 generations = 16384 genome-evals vs the
+  original 140) against an equal-budget panmictic tensor run, writing
+  experiments/perf/tensor_evo_ab.json (results quoted in EXPERIMENTS.md).
+
   PYTHONPATH=src python -m benchmarks.perf_ab
   PYTHONPATH=src python -m benchmarks.perf_ab --suite evaluator --workers 2
   PYTHONPATH=src python -m benchmarks.perf_ab --suite operators
   PYTHONPATH=src python -m benchmarks.perf_ab --suite kernels
   PYTHONPATH=src python -m benchmarks.perf_ab --suite islands
   PYTHONPATH=src python -m benchmarks.perf_ab --suite serving
+  PYTHONPATH=src python -m benchmarks.perf_ab --suite tensor_evo
 """
 
 from __future__ import annotations
@@ -558,6 +567,149 @@ def serving_ab(generations: int = 2, seed: int = 0,
     return out
 
 
+def tensor_evo_ab(seed: int = 0, pop: int = 1024,
+                  throughput_gens: int = 8) -> dict:
+    """The tensorized on-device engine vs the Python engine on the joint
+    three-kernel schedule space, plus the islands-vs-panmictic A/B rerun at
+    >= 100x the PR-4 genome budget.
+
+    Throughput arm: ``TensorGevoML`` (pop 1024) computes fitness for every
+    population lane in one jitted array program per generation;
+    ``GevoML(engine="python")`` evaluates per genome through the serial
+    evaluator (memoized, so its metric counts *executed* evaluations —
+    the favorable accounting for the Python arm).  Both numbers are
+    fitness-assignments/sec on the same workload.
+
+    Budget arm: 4 mesh islands x pop 1024 x 4 generations = 16384
+    genome-evals (PR 4's islands_ab executed 140 unique genomes, so this is
+    >= 100x that budget) vs one panmictic tensor population of 4096 at the
+    same generation count.  Pareto quality is 2-D hypervolume against a
+    reference slightly worse than the default schedule's fitness."""
+    import tempfile
+
+    from repro.core.nsga2 import hypervolume_2d
+    from repro.core.search import GevoML
+    from repro.core.tensor_evo import TensorGevoML, TensorIslandFleet
+    from repro.kernels.workloads import build_joint_kernel_workload
+
+    w = build_joint_kernel_workload()
+    to, eo = w.evaluate(w.program)
+    ref = (to * 1.05, eo + 0.05)
+
+    # -- throughput: population-evals/sec, tensor vs python engine ---------
+    t0 = time.perf_counter()
+    eng = TensorGevoML(w, pop_size=pop, n_elite=32, seed=seed)
+    res_t = eng.run(generations=throughput_gens, record_cache=False)
+    wall_t = time.perf_counter() - t0
+    evals_t = res_t.history[-1]["evals"]
+    tensor_rec = {
+        "pop_size": pop, "generations": throughput_gens,
+        "wall_s": round(wall_t, 4), "population_evals": evals_t,
+        "evals_per_s": round(evals_t / max(wall_t, 1e-9), 2),
+        "pareto": sorted(list(i.fitness) for i in res_t.pareto),
+        "hypervolume": hypervolume_2d(
+            [i.fitness for i in res_t.pareto], ref),
+    }
+    print(f"[tensor_evo_ab] tensor engine: {evals_t} population-evals in "
+          f"{wall_t:.2f}s = {tensor_rec['evals_per_s']}/s")
+
+    py_pop, py_gens = 64, 2
+    s = GevoML(w, engine="python", pop_size=py_pop, n_elite=16, seed=seed,
+               operators={"attr_tweak": 1.0})
+    t0 = time.perf_counter()
+    res_p = s.run(generations=py_gens)
+    wall_p = time.perf_counter() - t0
+    python_rec = {
+        "pop_size": py_pop, "generations": py_gens,
+        "wall_s": round(wall_p, 4), "executed_evals": s.n_evals,
+        "evals_per_s": round(s.n_evals / max(wall_p, 1e-9), 2),
+        "hypervolume": hypervolume_2d(
+            [i.fitness for i in res_p.pareto], ref),
+    }
+    print(f"[tensor_evo_ab] python engine: {s.n_evals} executed evals in "
+          f"{wall_p:.2f}s = {python_rec['evals_per_s']}/s")
+    speedup = round(tensor_rec["evals_per_s"]
+                    / max(python_rec["evals_per_s"], 1e-9), 2)
+
+    # -- 100x-budget islands vs panmictic at equal lane budget -------------
+    n_isl, ipop, igens = 4, pop, 4
+    genome_evals = n_isl * ipop * igens
+    root = tempfile.mkdtemp(prefix="tensor_islands_ab_")
+    t0 = time.perf_counter()
+    with TensorIslandFleet(w, root_dir=root, n_islands=n_isl, pop_size=ipop,
+                           n_elite=32, migrate_every=2, n_migrants=8,
+                           topology="full", seed=seed) as fleet:
+        res_i = fleet.run(igens)
+    wall_i = time.perf_counter() - t0
+    hv_islands = hypervolume_2d([i.fitness for i in res_i.pareto], ref)
+    islands_rec = {
+        "n_islands": n_isl, "pop_per_island": ipop, "generations": igens,
+        "topology": "full", "migrate_every": 2, "n_migrants": 8,
+        "wall_s": round(wall_i, 4),
+        "genome_evals": genome_evals,
+        "unique_genomes": res_i.cache_stats["entries"],
+        "migration_rounds": len(res_i.migration_log),
+        "cross_island_hits": res_i.cross_island_hits,
+        "writer_tags": res_i.cache_stats["writer_tags"],
+        "hypervolume": hv_islands,
+    }
+    print(f"[tensor_evo_ab] mesh islands: {genome_evals} genome-evals "
+          f"({islands_rec['unique_genomes']} unique) in {wall_i:.2f}s, "
+          f"hv={hv_islands:.3e}, "
+          f"{islands_rec['cross_island_hits']} cross-island hits")
+
+    t0 = time.perf_counter()
+    pan = TensorGevoML(w, pop_size=n_isl * ipop, n_elite=32, seed=seed)
+    res_pan = pan.run(generations=igens, record_cache=False)
+    wall_pan = time.perf_counter() - t0
+    hv_pan = hypervolume_2d([i.fitness for i in res_pan.pareto], ref)
+    pan_rec = {
+        "pop_size": n_isl * ipop, "generations": igens,
+        "wall_s": round(wall_pan, 4),
+        "genome_evals": res_pan.history[-1]["evals"],
+        "hypervolume": hv_pan,
+    }
+    print(f"[tensor_evo_ab] panmictic: {pan_rec['genome_evals']} "
+          f"genome-evals in {wall_pan:.2f}s, hv={hv_pan:.3e}")
+
+    out = {
+        "workload": w.name,
+        "space_size": w.space.size(),
+        "original_fitness": [to, eo],
+        "hv_reference": list(ref),
+        "tensor": tensor_rec,
+        "python": python_rec,
+        "speedup_tensor_vs_python": speedup,
+        "pr4_genome_budget": 140,
+        "budget_ratio_vs_pr4": round(genome_evals / 140, 1),
+        "islands": islands_rec,
+        "panmictic": pan_rec,
+        "hv_ratio_islands_vs_panmictic": round(
+            hv_islands / max(hv_pan, 1e-30), 3),
+    }
+    # the acceptance bars (see ISSUE/EXPERIMENTS.md): the tensorized engine
+    # must clear 10x the Python engine's eval throughput, the budget must be
+    # >= 100x PR 4's 140-genome islands_ab, and the mesh fleet's shared
+    # cache must actually be shared
+    assert speedup >= 10, \
+        f"tensor engine speedup {speedup}x fell below the 10x bar"
+    assert genome_evals >= 14000, \
+        f"budget {genome_evals} below 100x the PR-4 run (14000)"
+    assert islands_rec["cross_island_hits"] >= 1, \
+        "mesh shared cache reported no cross-island hits"
+    assert hv_islands >= 0.99 * hv_pan, \
+        (f"mesh islands hypervolume {hv_islands:.3e} fell below the "
+         f"panmictic baseline {hv_pan:.3e}")
+    os.makedirs(OUT, exist_ok=True)
+    path = os.path.join(OUT, "tensor_evo_ab.json")
+    json.dump(out, open(path, "w"), indent=1)
+    print(f"[tensor_evo_ab] wrote {path}; tensor/python throughput="
+          f"{speedup}x, islands/panmictic hv="
+          f"{out['hv_ratio_islands_vs_panmictic']}x at "
+          f"{out['budget_ratio_vs_pr4']}x the PR-4 budget")
+    return out
+
+
 def run_cells():
     os.makedirs(OUT, exist_ok=True)
 
@@ -610,7 +762,7 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--suite",
                     choices=("cells", "evaluator", "operators", "kernels",
-                             "islands", "serving", "all"),
+                             "islands", "serving", "tensor_evo", "all"),
                     default="cells")
     ap.add_argument("--workers", type=int, default=2,
                     help="ParallelEvaluator workers for --suite evaluator")
@@ -628,6 +780,8 @@ def main():
         islands_ab(generations=max(args.generations, 6))
     if args.suite in ("serving", "all"):
         serving_ab(generations=min(args.generations, 3))
+    if args.suite in ("tensor_evo", "all"):
+        tensor_evo_ab()
 
 
 if __name__ == "__main__":

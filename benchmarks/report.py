@@ -147,7 +147,18 @@ def suite_headlines(d: str = PERF_DIR) -> None:
               f"({sv['evolved']['throughput_tok_s']:.0f} vs "
               f"{sv['default']['throughput_tok_s']:.0f} tok/s; "
               f"{sv['serve_cache_records']} serve-tagged cache records) |")
-    if not any((ev, op, kn, isl, sv)):
+    tv = load("tensor_evo_ab.json")
+    if tv:
+        print(f"| tensor_evo | tensorized engine = "
+              f"{tv['speedup_tensor_vs_python']}x population-evals/sec vs "
+              f"the Python engine (pop {tv['tensor']['pop_size']}); mesh "
+              f"islands vs panmictic = "
+              f"{tv['hv_ratio_islands_vs_panmictic']}x hypervolume at "
+              f"{tv['islands']['genome_evals']} genome-evals "
+              f"({tv['budget_ratio_vs_pr4']}x the PR-4 budget, "
+              f"{tv['islands']['cross_island_hits']} cross-island cache "
+              f"hits) |")
+    if not any((ev, op, kn, isl, sv, tv)):
         print(f"| (none) | no *_ab.json suite records under {d} |")
 
 

@@ -17,7 +17,10 @@ its destination.  Run:
 Flags:
 
     --workload NAME     twofc | mobilenet | rmsnorm | flash_attention |
-                        mamba_scan
+                        mamba_scan | joint (all three kernels, one genome)
+    --engine E          python (spawned-process islands, default) | tensor
+                        (device-mesh islands: the whole fleet steps as one
+                        vmapped array program; kernel workloads only)
     --islands N         number of islands (default 4)
     --migrate-every K   generations between migrations (default 2)
     --migrants M        NSGA-II-best individuals each source sends (2)
@@ -40,8 +43,8 @@ from repro.core import IslandOrchestrator, default_island_specs
 from repro.core.islands import TOPOLOGIES, plan
 
 WORKLOADS = ("twofc", "mobilenet", "rmsnorm", "flash_attention",
-             "mamba_scan")
-KERNELS = ("rmsnorm", "flash_attention", "mamba_scan")
+             "mamba_scan", "joint")
+KERNELS = ("rmsnorm", "flash_attention", "mamba_scan", "joint")
 
 
 def build_workload(name: str):
@@ -58,6 +61,9 @@ def build_workload(name: str):
         return build_mobilenet_prediction_workload(
             alpha=0.125, n_eval=512, n_pretrain=2000, pretrain_epochs=2,
             verbose=True), None
+    if name == "joint":
+        from repro.kernels.workloads import build_joint_kernel_workload
+        return build_joint_kernel_workload(), {"attr_tweak": 1.0}
     from repro.kernels.workloads import build_kernel_workload
     return (build_kernel_workload(name, time_mode="static"),
             {"attr_tweak": 1.0})
@@ -66,6 +72,10 @@ def build_workload(name: str):
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--workload", default="twofc", choices=WORKLOADS)
+    ap.add_argument("--engine", default="python",
+                    choices=("python", "tensor"),
+                    help="tensor = device-mesh island fleet (kernel "
+                         "workloads only; see DESIGN.md Tensorized search)")
     ap.add_argument("--islands", type=int, default=4)
     ap.add_argument("--generations", type=int, default=6)
     ap.add_argument("--pop", type=int, default=8,
@@ -86,13 +96,19 @@ def main():
     args = ap.parse_args()
     if args.resume and not args.root:
         ap.error("--resume requires --root")
+    if args.engine == "tensor" and args.workload not in KERNELS:
+        ap.error("--engine tensor needs a kernel-schedule workload "
+                 f"({', '.join(KERNELS)})")
 
     print(f"Building {args.workload} workload...")
     w, operators = build_workload(args.workload)
     t0, e0 = w.evaluate(w.program)
     print(f"  original fitness: time={t0:.3e}s  error={e0:.4f}")
 
-    if args.processes == "auto":
+    if args.engine == "tensor":
+        processes, eval_workers = False, 0
+        print("  engine: tensor (vmapped mesh fleet, no island processes)")
+    elif args.processes == "auto":
         p = plan(args.islands)
         processes, eval_workers = p.processes, p.eval_workers
         print(f"  core plan: {p.describe()}")
@@ -120,7 +136,8 @@ def main():
         w, root_dir=root, specs=specs, pop_size=args.pop,
         migrate_every=args.migrate_every, n_migrants=args.migrants,
         topology=args.topology, processes=processes,
-        eval_workers=eval_workers, verbose=True)
+        eval_workers=eval_workers, verbose=True,
+        backend="mesh" if args.engine == "tensor" else "processes")
     res = orch.run(generations=args.generations, resume=args.resume)
 
     print("\nMerged Pareto front (argmin(time, error)):")

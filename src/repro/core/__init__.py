@@ -21,6 +21,9 @@ from .islands import (IslandOrchestrator, IslandResult, IslandSpec,
 from .islands import plan as plan_islands
 from .schedule import ScheduleError, ScheduleSpace
 from .search import GevoML, Individual, SearchResult, describe_patch
+from .tensor_evo import (GenomeEncoding, TensorEvaluator, TensorGevoML,
+                         TensorIslandFleet, TensorNSGA2,
+                         make_tensor_evaluator)
 
 __all__ = [
     "Edit", "EditError", "EditOp", "Patch",
@@ -34,4 +37,6 @@ __all__ = [
     "default_island_specs", "plan_islands",
     "ParetoFront", "FrontMember", "Artifact", "ArtifactRegistry",
     "ServeEngine", "ServeRequest", "ServeResult",
+    "GenomeEncoding", "TensorNSGA2", "TensorEvaluator",
+    "make_tensor_evaluator", "TensorGevoML", "TensorIslandFleet",
 ]

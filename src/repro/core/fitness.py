@@ -131,6 +131,11 @@ class KernelWorkload:
     # rebuild recipe for ParallelEvaluator workers (see core/evaluator.py);
     # required for parallel eval: runner is a closure and does not pickle
     spec: object | None = None
+    # batched-fitness recipe (core.tensor_evo.TensorFitnessSpec); optional —
+    # workloads without one fall back to per-genome evaluation.  Not part of
+    # the fingerprint: it is an evaluation *strategy*, not a protocol change
+    # (the batched path is bit-exact with the serial one).
+    tensor_spec: object | None = None
 
     def evaluate(self, program: Program) -> tuple[float, float]:
         try:

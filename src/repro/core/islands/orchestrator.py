@@ -113,13 +113,20 @@ class IslandOrchestrator:
     clears previous island checkpoints there (the cache file is kept — its
     entries are content-addressed and stay valid)."""
 
+    BACKENDS = ("processes", "mesh")
+
     def __init__(self, workload, *, root_dir: str,
                  n_islands: int = 4, specs: list[IslandSpec] | None = None,
                  migrate_every: int = 2, n_migrants: int = 2,
                  topology: str = "ring", pop_size: int = 8,
                  n_elite: int | None = None, max_tries: int = 40,
                  processes: bool = False, eval_workers: int = 0,
-                 cache_path: str | None = None, verbose: bool = False):
+                 cache_path: str | None = None, verbose: bool = False,
+                 backend: str = "processes"):
+        if backend not in self.BACKENDS:
+            raise ValueError(f"unknown backend {backend!r}; "
+                             f"choose from {self.BACKENDS}")
+        self.backend = backend
         if migrate_every < 1:
             raise ValueError("migrate_every must be >= 1")
         if n_migrants < 0:
@@ -287,7 +294,27 @@ class IslandOrchestrator:
         the on-disk state (and may extend ``generations`` beyond the
         previous call's).  ``on_generation(island_name, gen, history_row)``
         fires after each island generation's checkpoint lands (in-process
-        mode only)."""
+        mode only).
+
+        With ``backend="mesh"`` the fleet runs as one tensorized population
+        array (:class:`~repro.core.tensor_evo.TensorIslandFleet`) instead
+        of spawned GevoML processes: same topologies, migration rule,
+        shared cache (writer tags ``tensor:<axis>``), manifest, and
+        epoch-granular bit-exact resume — but each generation is a single
+        vmapped jit call across all islands."""
+        if self.backend == "mesh":
+            if on_generation is not None:
+                raise ValueError("on_generation requires the process "
+                                 "backend (backend='processes')")
+            from ..tensor_evo.islands import TensorIslandFleet
+            with TensorIslandFleet(
+                    self.w, root_dir=self.root_dir, specs=self.specs,
+                    migrate_every=self.migrate_every,
+                    n_migrants=self.n_migrants, topology=self.topology,
+                    pop_size=self.pop_size, n_elite=self.n_elite,
+                    cache_path=self.cache_path,
+                    verbose=self.verbose) as fleet:
+                return fleet.run(generations, resume=resume)
         n = len(self.specs)
         if resume:
             manifest = self._load_manifest()

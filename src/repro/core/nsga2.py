@@ -42,7 +42,10 @@ def fast_non_dominated_sort(objs: np.ndarray) -> list[list[int]]:
                 if counts[q] == 0:
                     nxt.append(q)
         i += 1
-        fronts.append(nxt)
+        # Canonical order: each front ascending by index, so downstream
+        # tie-breaking (crowding sort, elite order) is deterministic and
+        # reproducible by the tensorized engine.
+        fronts.append(sorted(nxt))
     return [f for f in fronts if f]
 
 
@@ -54,7 +57,7 @@ def crowding_distance(objs: np.ndarray, front: list[int]) -> np.ndarray:
         return np.full(m, np.inf)
     sub = objs[front]
     for k in range(sub.shape[1]):
-        order = np.argsort(sub[:, k])
+        order = np.argsort(sub[:, k], kind="stable")
         dist[order[0]] = dist[order[-1]] = np.inf
         span = sub[order[-1], k] - sub[order[0], k]
         if span <= 0:
@@ -100,8 +103,12 @@ def rank_select(objs: np.ndarray, n_elite: int
     elite_indices).  The search loop needs all three every generation —
     computing them together avoids ranking the population twice."""
     rank, crowd = rank_population(objs)
-    order = sorted(range(len(objs)), key=lambda i: (rank[i], -crowd[i]))
-    return rank, crowd, order[:n_elite]
+    # lexsort: primary rank asc, then crowding desc, then index asc.  Unlike
+    # sorted(key=...) this is well-defined even for nan crowding (nan sorts
+    # last within its rank) — the determinism contract the tensor engine
+    # (core.tensor_evo.nsga2) reproduces lane-exactly.
+    order = np.lexsort((np.arange(len(objs)), -crowd, rank))
+    return rank, crowd, [int(i) for i in order[:n_elite]]
 
 
 def select_elites(objs: np.ndarray, n_elite: int) -> list[int]:

@@ -122,7 +122,21 @@ class GevoML:
     :class:`~repro.core.evaluator.ParallelEvaluator` (or use ``cache_path``
     for a persistent fitness store) to scale evaluation.  ``checkpoint_dir``
     enables per-generation snapshots and ``run(resume=True)``.
+
+    ``engine`` selects the evaluation/selection machinery: ``"python"`` is
+    the per-genome path above; ``"tensor"`` swaps in the batched evaluator
+    (:func:`~repro.core.tensor_evo.make_tensor_evaluator` — one vectorized
+    fitness call per generation batch, with automatic fallback for
+    non-tensorizable workloads) and the array-native NSGA-II
+    (:class:`~repro.core.tensor_evo.TensorNSGA2`).  Both are bit-exact
+    twins of the Python path and the RNG is consumed identically, so a
+    seeded run produces the same populations, elites, and Pareto front
+    under either engine (asserted by ``tests/test_tensor_evo.py``).  For
+    the fully-jitted on-device loop, see
+    :class:`~repro.core.tensor_evo.TensorGevoML`.
     """
+
+    ENGINES = ("python", "tensor")
 
     def __init__(self, workload, *, pop_size: int = 32, n_elite: int = 16,
                  init_mutations: int = 3, crossover_rate: float = 0.8,
@@ -131,7 +145,12 @@ class GevoML:
                  operators: OperatorWeights | dict | str | None = None,
                  evaluator: Evaluator | None = None,
                  cache_path: str | None = None,
-                 checkpoint_dir: str | None = None):
+                 checkpoint_dir: str | None = None,
+                 engine: str = "python"):
+        if engine not in self.ENGINES:
+            raise ValueError(f"unknown engine {engine!r}; "
+                             f"choose from {self.ENGINES}")
+        self.engine = engine
         self.w = workload
         self.pop_size = pop_size
         self.n_elite = min(n_elite, pop_size)
@@ -145,11 +164,23 @@ class GevoML:
         self.stats = OperatorStats(self.operators.names())
         self._owns_evaluator = evaluator is None
         if evaluator is None:
-            evaluator = SerialEvaluator(workload, cache=FitnessCache(cache_path))
+            cache = FitnessCache(cache_path)
+            if engine == "tensor":
+                from .tensor_evo.evaluator import make_tensor_evaluator
+                evaluator = make_tensor_evaluator(workload, cache=cache)
+            else:
+                evaluator = SerialEvaluator(workload, cache=cache)
         elif cache_path is not None:
             raise ValueError("pass cache_path OR a pre-built evaluator "
                              "(give its FitnessCache the path), not both")
         self.evaluator = evaluator
+        if engine == "tensor":
+            from .tensor_evo import nsga2 as _tnsga
+            self._rank_select = _tnsga.rank_select
+            self._pareto_front = _tnsga.pareto_front
+        else:
+            self._rank_select = rank_select
+            self._pareto_front = pareto_front
         self.checkpoint_dir = checkpoint_dir
         self._n_invalid_outcomes = 0
 
@@ -367,7 +398,7 @@ class GevoML:
 
         for gen in range(start_gen, generations):
             objs = np.array([i.fitness for i in pop])
-            rank, crowd, elite_idx = rank_select(objs, self.n_elite)
+            rank, crowd, elite_idx = self._rank_select(objs, self.n_elite)
             elites = [pop[i] for i in elite_idx]
             for ind in elites:
                 self.stats.count_elite(ind.patch.kinds())
@@ -377,7 +408,7 @@ class GevoML:
                 "offspring")
             pop = elites + offspring
             objs = np.array([i.fitness for i in pop])
-            pf = pareto_front(objs)
+            pf = self._pareto_front(objs)
             history.append({
                 "gen": gen,
                 "best_time": float(objs[:, 0].min()),
@@ -401,7 +432,7 @@ class GevoML:
             if on_generation is not None:
                 on_generation(gen, history[-1])
         objs = np.array([i.fitness for i in pop])
-        pf = [pop[i] for i in pareto_front(objs)]
+        pf = [pop[i] for i in self._pareto_front(objs)]
         # de-duplicate pareto members by fitness
         seen, pareto = set(), []
         for ind in sorted(pf, key=lambda i: i.fitness):

@@ -1,0 +1,36 @@
+"""Tensorized on-device evolution (the EvoX-style engine).
+
+The Python engine treats individuals as patch objects and evaluates them
+one at a time; this package keeps a whole population as a fixed-shape
+``(pop, n_knobs)`` index matrix and expresses every stage of the
+generation — fitness, non-dominated sort, crowding, tournament, crossover,
+mutation — as jittable array programs:
+
+* :mod:`.encoding` — index rows <-> genomes <-> canonical patches;
+* :mod:`.nsga2` — ``TensorNSGA2``, the array-native selection kernel
+  (bit-exact twin of ``core/nsga2.py`` on the numpy backend);
+* :mod:`.fitness` — batched roofline + gates + error-class tables;
+* :mod:`.evaluator` — the batched path behind the ``Evaluator`` interface
+  (what ``GevoML(engine="tensor")`` swaps in), with ``ParallelEvaluator``
+  fallback for workloads that can't vectorize;
+* :mod:`.engine` — ``TensorGevoML``, the fully jitted generation loop;
+* :mod:`.islands` — ``TensorIslandFleet``, N islands on a mesh axis (the
+  ``backend="mesh"`` of ``IslandOrchestrator``).
+"""
+
+from .encoding import CANONICAL_SEED, GenomeEncoding
+from .engine import TensorGevoML
+from .evaluator import TensorEvaluator, make_tensor_evaluator, tensorizable
+from .fitness import BatchedFitness, KernelBlock, TensorFitnessSpec
+from .islands import TensorIslandFleet, mesh_writer_tag
+from .nsga2 import (TensorNSGA2, pareto_front, rank_crowd, rank_select,
+                    selection_order)
+
+__all__ = [
+    "CANONICAL_SEED", "GenomeEncoding",
+    "TensorNSGA2", "rank_crowd", "rank_select", "selection_order",
+    "pareto_front",
+    "TensorFitnessSpec", "KernelBlock", "BatchedFitness",
+    "TensorEvaluator", "make_tensor_evaluator", "tensorizable",
+    "TensorGevoML", "TensorIslandFleet", "mesh_writer_tag",
+]

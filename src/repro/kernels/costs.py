@@ -19,9 +19,29 @@ Configurations whose VMEM working set exceeds the chip (16 MB) would not
 launch; they raise :class:`~repro.core.fitness.InvalidVariant` — the paper's
 execute-successfully gate, not an objective.  Causal masking is charged at
 full cost: the kernels mask with ``where`` and do not skip dead blocks.
+
+Array-native core
+-----------------
+Each model is written ONCE in array form against an explicit ``xp`` module
+(``numpy`` or ``jax.numpy``) using only elementwise ops, so the same source
+serves three callers with three numeric contracts:
+
+* the scalar API (``rmsnorm_time`` / ... / ``schedule_time``) — numpy on
+  0-d values, raising :class:`InvalidVariant` on gate failures;
+* the batched parity path (``schedule_terms(numpy, ...)``) used by
+  ``core.tensor_evo`` — **bit-exact** with the scalar API by construction
+  (identical op structure, IEEE numpy doubles, no fusion);
+* the jitted on-device path (``schedule_terms(jax.numpy, ...)`` inside
+  ``jit`` under x64) — same formulas; XLA may fuse an FMA, so agreement is
+  to ~1 ulp, which the tensor engine's internal consistency absorbs.
+
+Gate failures surface as a boolean ``valid`` lane mask plus structured
+``gates`` diagnostics that reconstruct the exact scalar-path messages.
 """
 
 from __future__ import annotations
+
+import numpy as np
 
 from ..core.fitness import HBM_BW, PEAK_FLOPS, InvalidVariant
 
@@ -31,38 +51,132 @@ GRID_STEP_S = 2e-7          # sequential per-grid-step bookkeeping
 SEQ_STEP_S = 5e-8           # per-timestep latency of an in-kernel scan
 
 
-def _pad(x: int, m: int) -> int:
+def _pad(x, m):
     return -(-x // m) * m
 
 
-def _vmem_check(name: str, used: int) -> None:
-    if used > VMEM_BYTES:
-        raise InvalidVariant(
-            f"{name}: VMEM working set {used / 2**20:.1f} MB exceeds "
+# -- gate bookkeeping ---------------------------------------------------------
+# A gate is ("block"|"vmem", ok, *message args).  The scalar wrappers raise
+# on the first failed gate; the batched path ANDs the ok lanes into `valid`
+# and reconstructs per-lane messages with `gate_message`.
+
+def _block_msg(name, dim, block) -> str:
+    return f"{name}: block {block} does not divide dim {dim}"
+
+
+def _vmem_msg(name, used) -> str:
+    return (f"{name}: VMEM working set {used / 2**20:.1f} MB exceeds "
             f"{VMEM_BYTES / 2**20:.0f} MB — config would not launch")
 
 
-def _block_check(name: str, dim: int, block: int) -> None:
-    if dim % min(block, dim) != 0:
-        raise InvalidVariant(
-            f"{name}: block {block} does not divide dim {dim}")
+def _block_gate(name, dim, block):
+    return ("block", (dim % block) == 0, name, dim, block)
+
+
+def _vmem_gate(name, used):
+    return ("vmem", used <= VMEM_BYTES, name, used)
+
+
+def _raise_failed_gate(gates) -> None:
+    """Scalar path: raise InvalidVariant for the first failed gate, with the
+    same message and in the same check order as the historical code."""
+    for kind, ok, *args in gates:
+        if not bool(ok):
+            msg = _block_msg(args[0], int(args[1]), int(args[2])) \
+                if kind == "block" else _vmem_msg(args[0], int(args[1]))
+            raise InvalidVariant(msg)
+
+
+def gate_message(gates, lane: int) -> str | None:
+    """The scalar-path InvalidVariant message for one lane of a batched
+    gate evaluation, or None when every gate passes there."""
+    for kind, ok, *args in gates:
+        if not bool(np.asarray(ok).reshape(-1)[lane]
+                    if np.ndim(ok) else ok):
+            if kind == "block":
+                name, dim, block = args
+                b = np.asarray(block).reshape(-1)
+                return _block_msg(name, int(dim),
+                                  int(b[lane] if b.size > 1 else b[0]))
+            name, used = args
+            u = np.asarray(used).reshape(-1)
+            return _vmem_msg(name, int(u[lane] if u.size > 1 else u[0]))
+    return None
+
+
+def gates_ok(xp, gates):
+    v = True
+    for _, ok, *_ in gates:
+        v = v & ok if v is not True else ok
+    return v
+
+
+# -- rmsnorm ------------------------------------------------------------------
+
+def _rmsnorm_ref(xp, *, rows: int, d: int):
+    traffic = 4 * (3 * rows * d + 2 * rows + 2 * d)
+    return xp.maximum(4 * rows * d / VPU_FLOPS, traffic / HBM_BW)
+
+
+def _rmsnorm_pallas(xp, block_rows, is_unfused, *, rows: int, d: int):
+    block = xp.minimum(block_rows, rows)
+    gates = (_block_gate("rmsnorm", rows, block),
+             _vmem_gate("rmsnorm", 4 * (2 * block * d + d)))
+    traffic = (4 * (2 * rows * d + d)
+               + xp.where(is_unfused, 4 * (2 * rows * d + d), 0))
+    steps = rows // block
+    t = (xp.maximum(4 * rows * d / VPU_FLOPS, traffic / HBM_BW)
+         + steps * GRID_STEP_S)
+    return t, gates
 
 
 def rmsnorm_time(genome: dict, *, rows: int, d: int) -> float:
     """(rows, d) f32 rows normalized; ``ref`` pays the unfused intermediate
     round-trips, ``pallas`` streams each row block once."""
     if genome["impl"] == "ref":
-        traffic = 4 * (3 * rows * d + 2 * rows + 2 * d)
-        return max(4 * rows * d / VPU_FLOPS, traffic / HBM_BW)
-    block = min(genome["block_rows"], rows)
-    _block_check("rmsnorm", rows, block)
-    _vmem_check("rmsnorm", 4 * (2 * block * d + d))
-    traffic = 4 * (2 * rows * d + d)
-    if genome["epilogue"] == "unfused":
-        traffic += 4 * (2 * rows * d + d)  # y round-trips for the scale mul
-    steps = rows // block
-    return (max(4 * rows * d / VPU_FLOPS, traffic / HBM_BW)
-            + steps * GRID_STEP_S)
+        return float(_rmsnorm_ref(np, rows=rows, d=d))
+    t, gates = _rmsnorm_pallas(np, genome["block_rows"],
+                               genome["epilogue"] == "unfused",
+                               rows=rows, d=d)
+    _raise_failed_gate(gates)
+    return float(t)
+
+
+def rmsnorm_terms(xp, cols: dict, *, rows: int, d: int):
+    t, gates = _rmsnorm_pallas(xp, cols["block_rows"], cols["is_unfused"],
+                               rows=rows, d=d)
+    time = xp.where(cols["is_ref"], _rmsnorm_ref(xp, rows=rows, d=d), t)
+    valid = cols["is_ref"] | gates_ok(xp, gates)
+    return time, valid, gates
+
+
+# -- flash attention ----------------------------------------------------------
+
+def _flash_ref(xp, *, B: int, H: int, S: int, hd: int):
+    flops = B * H * (4 * S * S * hd + 5 * S * S)
+    traffic = 4 * B * H * (4 * S * hd + 4 * S * S)
+    return xp.maximum(flops / PEAK_FLOPS, traffic / HBM_BW)
+
+
+def _flash_pallas(xp, block_q, block_k, *, B: int, H: int, S: int, hd: int):
+    bq = xp.minimum(block_q, S)
+    bk = xp.minimum(block_k, S)
+    gates = (_block_gate("flash_attention q", S, bq),
+             _block_gate("flash_attention k", S, bk),
+             _vmem_gate("flash_attention",
+                        4 * (bq * hd + 2 * bk * hd)          # q/k/v tiles
+                        + 4 * (bq * bk + bq * hd + 2 * bq)))  # scores+scratch
+    n_q, n_k = S // bq, S // bk
+    pairs = B * H * n_q * n_k
+    # MXU pads each matmul to (8, 128) output tiles; contraction unpadded.
+    mxu = pairs * 2 * _pad(bq, 8) * (_pad(bk, 128) * hd + _pad(hd, 128) * bk)
+    vpu = pairs * 5 * bq * bk                           # softmax bookkeeping
+    traffic = 4 * (B * H * 2 * S * hd                   # q in, out
+                   + pairs * 2 * bk * hd)               # k/v per (q, k) pair
+    t = (xp.maximum(xp.maximum(mxu / PEAK_FLOPS, vpu / VPU_FLOPS),
+                    traffic / HBM_BW)
+         + pairs * GRID_STEP_S)
+    return t, gates
 
 
 def flash_attention_time(genome: dict, *, B: int, H: int, S: int,
@@ -71,25 +185,42 @@ def flash_attention_time(genome: dict, *, B: int, H: int, S: int,
     scores in HBM; ``pallas`` streams K/V tiles, re-fetching them once per
     query block."""
     if genome["impl"] == "ref":
-        flops = B * H * (4 * S * S * hd + 5 * S * S)
-        traffic = 4 * B * H * (4 * S * hd + 4 * S * S)
-        return max(flops / PEAK_FLOPS, traffic / HBM_BW)
-    bq = min(genome["block_q"], S)
-    bk = min(genome["block_k"], S)
-    _block_check("flash_attention q", S, bq)
-    _block_check("flash_attention k", S, bk)
-    _vmem_check("flash_attention",
-                4 * (bq * hd + 2 * bk * hd)            # q/k/v tiles (f32)
-                + 4 * (bq * bk + bq * hd + 2 * bq))    # scores + scratch
-    n_q, n_k = S // bq, S // bk
-    pairs = B * H * n_q * n_k
-    # MXU pads each matmul to (8, 128) output tiles; contraction unpadded.
-    mxu = pairs * 2 * _pad(bq, 8) * (_pad(bk, 128) * hd + _pad(hd, 128) * bk)
-    vpu = pairs * 5 * bq * bk                           # softmax bookkeeping
-    traffic = 4 * (B * H * 2 * S * hd                   # q in, out
-                   + pairs * 2 * bk * hd)               # k/v per (q, k) pair
-    return (max(mxu / PEAK_FLOPS, vpu / VPU_FLOPS, traffic / HBM_BW)
-            + pairs * GRID_STEP_S)
+        return float(_flash_ref(np, B=B, H=H, S=S, hd=hd))
+    t, gates = _flash_pallas(np, genome["block_q"], genome["block_k"],
+                             B=B, H=H, S=S, hd=hd)
+    _raise_failed_gate(gates)
+    return float(t)
+
+
+def flash_attention_terms(xp, cols: dict, *, B: int, H: int, S: int,
+                          hd: int):
+    t, gates = _flash_pallas(xp, cols["block_q"], cols["block_k"],
+                             B=B, H=H, S=S, hd=hd)
+    time = xp.where(cols["is_ref"], _flash_ref(xp, B=B, H=H, S=S, hd=hd), t)
+    valid = cols["is_ref"] | gates_ok(xp, gates)
+    return time, valid, gates
+
+
+# -- mamba scan ---------------------------------------------------------------
+
+def _mamba_ref(xp, *, Bt: int, L: int, D: int, N: int):
+    elems = Bt * L * D * N
+    traffic = 4 * (4 * elems + 3 * Bt * L * D + 2 * Bt * L * N + D * N)
+    return (xp.maximum(6 * elems / VPU_FLOPS, traffic / HBM_BW)
+            + L * SEQ_STEP_S)
+
+
+def _mamba_pallas(xp, chunk_in, *, Bt: int, L: int, D: int, N: int):
+    elems = Bt * L * D * N
+    chunk = xp.minimum(chunk_in, L)
+    gates = (_block_gate("mamba_scan", L, chunk),
+             _vmem_gate("mamba_scan",
+                        4 * (3 * chunk * D + 2 * chunk * N + D * N)))
+    traffic = 4 * (3 * Bt * L * D + 2 * Bt * L * N + D * N)
+    steps = Bt * (L // chunk)
+    t = (xp.maximum(6 * elems / VPU_FLOPS, traffic / HBM_BW)
+         + steps * GRID_STEP_S + L * SEQ_STEP_S)
+    return t, gates
 
 
 def mamba_scan_time(genome: dict, *, Bt: int, L: int, D: int,
@@ -97,17 +228,18 @@ def mamba_scan_time(genome: dict, *, Bt: int, L: int, D: int,
     """(Bt, L, D) selective scan with state (D, N).  ``ref`` materializes
     the (Bt, L, D, N) decay/drive tensors in HBM; ``pallas`` keeps the state
     in VMEM scratch across sequence chunks."""
-    elems = Bt * L * D * N
     if genome["impl"] == "ref":
-        traffic = 4 * (4 * elems + 3 * Bt * L * D + 2 * Bt * L * N + D * N)
-        return max(6 * elems / VPU_FLOPS, traffic / HBM_BW) + L * SEQ_STEP_S
-    chunk = min(genome["chunk"], L)
-    _block_check("mamba_scan", L, chunk)
-    _vmem_check("mamba_scan", 4 * (3 * chunk * D + 2 * chunk * N + D * N))
-    traffic = 4 * (3 * Bt * L * D + 2 * Bt * L * N + D * N)
-    steps = Bt * (L // chunk)
-    return (max(6 * elems / VPU_FLOPS, traffic / HBM_BW)
-            + steps * GRID_STEP_S + L * SEQ_STEP_S)
+        return float(_mamba_ref(np, Bt=Bt, L=L, D=D, N=N))
+    t, gates = _mamba_pallas(np, genome["chunk"], Bt=Bt, L=L, D=D, N=N)
+    _raise_failed_gate(gates)
+    return float(t)
+
+
+def mamba_scan_terms(xp, cols: dict, *, Bt: int, L: int, D: int, N: int):
+    t, gates = _mamba_pallas(xp, cols["chunk"], Bt=Bt, L=L, D=D, N=N)
+    time = xp.where(cols["is_ref"], _mamba_ref(xp, Bt=Bt, L=L, D=D, N=N), t)
+    valid = cols["is_ref"] | gates_ok(xp, gates)
+    return time, valid, gates
 
 
 _MODELS = {
@@ -116,8 +248,36 @@ _MODELS = {
     "mamba_scan": mamba_scan_time,
 }
 
+_TERMS = {
+    "rmsnorm": rmsnorm_terms,
+    "flash_attention": flash_attention_terms,
+    "mamba_scan": mamba_scan_terms,
+}
+
+# How a kernel's schedule knobs map onto the cost columns the array models
+# consume: (column, knob, flag).  ``flag=None`` passes the knob's numeric
+# choice value through; otherwise the column is the boolean ``value == flag``
+# (so string knobs never reach the array path as strings).
+COL_SPECS: dict[str, tuple[tuple[str, str, object], ...]] = {
+    "rmsnorm": (("is_ref", "impl", "ref"),
+                ("block_rows", "block_rows", None),
+                ("is_unfused", "epilogue", "unfused")),
+    "flash_attention": (("is_ref", "impl", "ref"),
+                        ("block_q", "block_q", None),
+                        ("block_k", "block_k", None)),
+    "mamba_scan": (("is_ref", "impl", "ref"),
+                   ("chunk", "chunk", None)),
+}
+
 
 def schedule_time(kernel: str, genome: dict, **shape) -> float:
     """Deterministic roofline-lite time of ``kernel`` under ``genome`` on the
     given shape; raises :class:`InvalidVariant` for un-launchable configs."""
     return _MODELS[kernel](genome, **shape)
+
+
+def schedule_terms(xp, kernel: str, cols: dict, **shape):
+    """Batched roofline: ``(time, valid, gates)`` over per-lane cost columns
+    (see :data:`COL_SPECS`).  With ``xp=numpy`` this is bit-exact with
+    :func:`schedule_time`; with ``xp=jax.numpy`` it is jit/vmap-traceable."""
+    return _TERMS[kernel](xp, cols, **shape)

@@ -134,11 +134,39 @@ def _ref_output(kernel: str, inputs):
                       np.float32)
 
 
+# The knobs a kernel's *numerical error* actually depends on — the error
+# equivalence classes of the batched fitness path (core.tensor_evo).  The
+# excluded knobs only partition independent rows of the iteration space
+# (rmsnorm's block_rows, flash's block_q: per-row arithmetic is unchanged),
+# so error is class-constant.  The parity tests (tests/test_tensor_evo.py)
+# assert batched == per-genome serial error on every kernel, which keeps
+# this table honest.
+ERROR_KNOBS: dict[str, tuple[str, ...]] = {
+    "rmsnorm": ("impl", "epilogue"),
+    "flash_attention": ("impl", "block_k"),
+    "mamba_scan": ("impl", "chunk"),
+}
+
+
+def _kernel_error(kernel: str, genome: dict, inputs, ref_out) -> float:
+    """Execute one scheduled kernel and return max |out - ref| — the single
+    error implementation shared by the serial runners and the batched
+    error-class path (parity by construction)."""
+    fn = _variant_fn(kernel, genome)
+    try:
+        out = fn(inputs)
+    except Exception as e:
+        raise InvalidVariant(f"{kernel} failed to launch: {e}") from e
+    return float(np.max(np.abs(np.asarray(out, np.float32) - ref_out)))
+
+
 def build_kernel_workload(kernel: str = "rmsnorm", *,
                           time_mode: str = "static",
                           seed: int = 0) -> KernelWorkload:
     """One Pallas kernel as a GEVO scenario: schedule genome + (time, error)
     fitness.  Deterministic given kwargs (required by WorkloadSpec)."""
+    from ..core.tensor_evo.fitness import KernelBlock, TensorFitnessSpec
+
     space = kernel_space(kernel)
     shape = SHAPES[kernel]
     inputs = _inputs(kernel, seed)
@@ -146,16 +174,11 @@ def build_kernel_workload(kernel: str = "rmsnorm", *,
 
     def runner(genome: dict) -> tuple[float, float]:
         t = schedule_time(kernel, genome, **shape)  # validates launchability
-        fn = _variant_fn(kernel, genome)
-        try:
-            out = fn(inputs)
-        except Exception as e:
-            raise InvalidVariant(f"{kernel} failed to launch: {e}") from e
-        err = float(np.max(np.abs(np.asarray(out, np.float32) - ref_out)))
+        err = _kernel_error(kernel, genome, inputs, ref_out)
         if time_mode == "measured":
             # jit the whole variant: the ref/epilogue paths are plain jnp
             # (eager per-op dispatch would drown the schedule signal)
-            t = measured_time(jax.jit(fn), inputs)
+            t = measured_time(jax.jit(_variant_fn(kernel, genome)), inputs)
         return t, err
 
     return KernelWorkload(
@@ -167,6 +190,96 @@ def build_kernel_workload(kernel: str = "rmsnorm", *,
         spec=WorkloadSpec.make(
             "repro.kernels.workloads:build_kernel_workload",
             kernel=kernel, time_mode=time_mode, seed=seed),
+        tensor_spec=TensorFitnessSpec(blocks=(KernelBlock.make(
+            kernel, shape, ERROR_KNOBS[kernel],
+            lambda g: _kernel_error(kernel, g, inputs, ref_out)),)),
+    )
+
+
+# Extended choice lists for the joint (all-kernels) space.  Deliberately
+# include values that do NOT divide the evaluation shapes (48/192 vs 512 and
+# 256; 12/48 vs 128): those configurations fail the launchability gates, so
+# the joint space — unlike the per-kernel test spaces above, which stay
+# launchable-by-construction — exercises the invalid-lane machinery at scale.
+_JOINT_SPACES: dict[str, dict[str, tuple]] = {
+    "rmsnorm": {"impl": ("pallas", "ref"),
+                "block_rows": (32, 48, 64, 128, 192, 256, 512),
+                "epilogue": ("fused", "unfused")},
+    "flash_attention": {"impl": ("pallas", "ref"),
+                        "block_q": (16, 32, 48, 64, 128, 192, 256),
+                        "block_k": (16, 32, 48, 64, 128, 192, 256)},
+    "mamba_scan": {"impl": ("pallas", "ref"),
+                   "chunk": (8, 12, 16, 32, 48, 64, 128)},
+}
+
+
+def joint_space() -> ScheduleSpace:
+    """One schedule space over every kernel's knobs, prefixed
+    ``<kernel>.<knob>`` — ~38k genomes, the 100×-budget search target."""
+    params = {f"{kernel}.{knob}": choices
+              for kernel in KERNELS
+              for knob, choices in _JOINT_SPACES[kernel].items()}
+    return ScheduleSpace.of("kernel/joint", params)
+
+
+def build_joint_kernel_workload(*, time_mode: str = "static",
+                                seed: int = 0) -> KernelWorkload:
+    """All three kernels as ONE genome: fitness is (sum of schedule times,
+    max of kernel errors) over the prefixed joint space.  The serial runner
+    and the batched tensor path combine per-kernel terms in the same
+    (KERNELS) order, so they agree bit-exactly.  Static time only: a summed
+    wall-clock of three separately-jitted kernels measures dispatch, not
+    schedules."""
+    from ..core.tensor_evo.fitness import KernelBlock, TensorFitnessSpec
+
+    if time_mode != "static":
+        raise ValueError("joint workload supports time_mode='static' only")
+    space = joint_space()
+    inputs = {k: _inputs(k, seed) for k in KERNELS}
+    refs = {k: _ref_output(k, inputs[k]) for k in KERNELS}
+
+    def sub_genome(genome: dict, kernel: str) -> dict:
+        return {knob: genome[f"{kernel}.{knob}"]
+                for knob in _JOINT_SPACES[kernel]}
+
+    def runner(genome: dict) -> tuple[float, float]:
+        # gates first, in kernel order — the first unlaunchable kernel's
+        # message is the variant's invalidity reason (matches the batched
+        # path's first-invalid-block reporting)
+        t = 0.0
+        for kernel in KERNELS:
+            t += schedule_time(kernel, sub_genome(genome, kernel),
+                               **SHAPES[kernel])
+        err = None
+        for kernel in KERNELS:
+            e = _kernel_error(kernel, sub_genome(genome, kernel),
+                              inputs[kernel], refs[kernel])
+            err = e if err is None else max(err, e)
+        return t, err
+
+    def error_fn(kernel: str):
+        return lambda g: _kernel_error(kernel, g, inputs[kernel],
+                                       refs[kernel])
+
+    blocks = tuple(
+        KernelBlock.make(
+            kernel, SHAPES[kernel], ERROR_KNOBS[kernel], error_fn(kernel),
+            knob_map={knob: f"{kernel}.{knob}"
+                      for knob in _JOINT_SPACES[kernel]})
+        for kernel in KERNELS)
+    baseline = {f"{kernel}.{knob}": BASELINES[kernel][knob]
+                for kernel in KERNELS
+                for knob in _JOINT_SPACES[kernel]}
+    return KernelWorkload(
+        name="kernel/joint",
+        program=space.encode(baseline),
+        space=space,
+        runner=runner,
+        time_mode=time_mode,
+        spec=WorkloadSpec.make(
+            "repro.kernels.workloads:build_joint_kernel_workload",
+            time_mode=time_mode, seed=seed),
+        tensor_spec=TensorFitnessSpec(blocks=blocks),
     )
 
 

@@ -128,6 +128,26 @@ def test_torn_tail_dropped_then_reread(tmp_path):
     c.close()
 
 
+def test_mesh_island_writer_tags_unique_in_shared_cache(tmp_path):
+    """The tensorized island backend tags every record with its mesh-axis
+    writer (``tensor:<i>``): tags are unique by construction, and a real
+    fleet run leaves exactly the expected writer set in the shared file."""
+    from repro.core.tensor_evo import TensorIslandFleet, mesh_writer_tag
+    from repro.kernels.workloads import build_kernel_workload
+
+    n = 16
+    assert len({mesh_writer_tag(i) for i in range(n)}) == n
+
+    w = build_kernel_workload("rmsnorm")
+    with TensorIslandFleet(w, root_dir=str(tmp_path), n_islands=2,
+                           pop_size=8, n_elite=2, seed=0) as fleet:
+        res = fleet.run(2)
+    assert res.cache_stats["writer_tags"] == ["tensor:0", "tensor:1"]
+    writers = {json.loads(line)["writer"]
+               for line in open(tmp_path / "cache.jsonl")}
+    assert writers == {"tensor:0", "tensor:1"}
+
+
 @pytest.mark.parametrize("persist_invalid", [True, False])
 def test_persist_invalid_still_honored(tmp_path, persist_invalid):
     path = str(tmp_path / "fitness.jsonl")

@@ -83,6 +83,23 @@ class TestSuiteHeadlines:
             "(1061 vs 651 tok/s; 2 serve-tagged cache records) |",
         ]
 
+    def test_tensor_evo_golden(self, tmp_path, capsys):
+        d = str(tmp_path)
+        _write(d, "tensor_evo_ab.json",
+               {"speedup_tensor_vs_python": 57.41,
+                "tensor": {"pop_size": 1024},
+                "hv_ratio_islands_vs_panmictic": 1.0,
+                "budget_ratio_vs_pr4": 117.0,
+                "islands": {"genome_evals": 16384,
+                            "cross_island_hits": 1242}})
+        suite_headlines(d)
+        out = capsys.readouterr().out.splitlines()
+        assert out[3] == (
+            "| tensor_evo | tensorized engine = 57.41x "
+            "population-evals/sec vs the Python engine (pop 1024); mesh "
+            "islands vs panmictic = 1.0x hypervolume at 16384 genome-evals "
+            "(117.0x the PR-4 budget, 1242 cross-island cache hits) |")
+
     def test_no_records(self, tmp_path, capsys):
         suite_headlines(str(tmp_path))
         assert "(none)" in capsys.readouterr().out

@@ -1,0 +1,236 @@
+"""Parity tests for the tensorized evaluation/search path.
+
+The contract the whole ``core.tensor_evo`` package rests on: the batched
+NumPy fitness path is *bit-exact* with ``SerialEvaluator`` — same fitness
+tuples, same invalid-variant messages — and genome index rows round-trip
+through the Patch/doc world losslessly (canonical patches, stable cache
+keys).  On top of that, ``GevoML(engine="tensor")`` must be a seeded twin
+of the Python engine, and ``TensorGevoML``/``TensorIslandFleet`` must
+checkpoint-resume bit-exactly.
+"""
+
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import GevoML, IslandOrchestrator
+from repro.core.evaluator import SerialEvaluator, workload_fingerprint
+from repro.core.serialize import patch_key
+from repro.core.tensor_evo import (TensorEvaluator, TensorGevoML,
+                                   TensorIslandFleet, make_tensor_evaluator,
+                                   mesh_writer_tag)
+from repro.core.tensor_evo.evaluator import tensorizable
+from repro.kernels.workloads import (KERNELS, build_joint_kernel_workload,
+                                     build_kernel_workload)
+
+
+def _random_rows(encoding, n, seed):
+    rng = np.random.default_rng(seed)
+    nc = encoding.n_choices()
+    return np.stack([rng.integers(0, nc) for _ in range(n)])
+
+
+# ---- batched fitness == SerialEvaluator -------------------------------------
+
+@pytest.mark.parametrize("kernel", KERNELS)
+def test_batched_matches_serial_per_kernel(kernel):
+    """Fitness AND messages: lane j of the batched path == the serial
+    evaluator on lane j's canonical patch, exactly."""
+    w = build_kernel_workload(kernel, time_mode="static")
+    te = TensorEvaluator(w)
+    rows = _random_rows(te.encoding, 16, seed=hash(kernel) % 2**32)
+    patches = [te.encoding.to_patch(r) for r in rows]
+    se = SerialEvaluator(w)
+    serial = se.evaluate_batch(patches)
+    tensor = te._evaluate_misses(patches)
+    for s, t in zip(serial, tensor):
+        assert t.fitness == s.fitness
+        assert t.error == s.error
+    assert te.n_batched == len(rows)
+    se.close()
+    te.close()
+
+
+def test_joint_workload_parity_includes_invalid_lanes():
+    """The joint space deliberately contains un-launchable knob values;
+    invalid lanes must reproduce the serial gate messages verbatim."""
+    w = build_joint_kernel_workload()
+    te = TensorEvaluator(w)
+    rows = _random_rows(te.encoding, 24, seed=5)
+    patches = [te.encoding.to_patch(r) for r in rows]
+    se = SerialEvaluator(w)
+    serial = se.evaluate_batch(patches)
+    tensor = te._evaluate_misses(patches)
+    n_invalid = sum(1 for s in serial if not s.ok)
+    assert n_invalid >= 1, "seeded sample should hit an un-launchable lane"
+    for s, t in zip(serial, tensor):
+        assert t.fitness == s.fitness
+        assert t.error == s.error
+    se.close()
+    te.close()
+
+
+# ---- encoding round-trip / patch hashing ------------------------------------
+
+def test_encode_decode_roundtrip_bit_exact():
+    w = build_joint_kernel_workload()
+    te = TensorEvaluator(w)
+    enc, fp = te.encoding, workload_fingerprint(w)
+    rows = _random_rows(enc, 20, seed=11)
+    keys = set()
+    for row in rows:
+        p = enc.to_patch(row)
+        back = enc.from_patch(p, w.program)
+        assert np.array_equal(back, row)
+        # canonical: re-encoding yields the identical patch, hence the
+        # identical persistent cache key
+        assert patch_key(fp, enc.to_patch(row)) == patch_key(fp, p)
+        keys.add(patch_key(fp, p))
+    unique_rows = {tuple(int(v) for v in r) for r in rows}
+    assert len(keys) == len(unique_rows)
+    te.close()
+
+
+def test_baseline_row_encodes_to_empty_patch():
+    w = build_kernel_workload("rmsnorm")
+    te = TensorEvaluator(w)
+    p = te.encoding.to_patch(te.encoding.baseline_row())
+    assert len(p.edits) == 0
+    te.close()
+
+
+def test_out_of_range_row_rejected():
+    w = build_kernel_workload("rmsnorm")
+    te = TensorEvaluator(w)
+    bad = te.encoding.baseline_row().copy()
+    bad[0] = te.encoding.n_choices()[0]           # one past the end
+    with pytest.raises(ValueError):
+        te.encoding.to_patch(bad)
+    te.close()
+
+
+# ---- GevoML(engine="tensor") is a seeded twin -------------------------------
+
+def test_seeded_engine_equivalence():
+    """Same seed, same generations: the tensor engine flag must reproduce
+    the Python engine's elite set patch-hash-exactly (identical RNG
+    consumption + bit-exact selection + bit-exact evaluation)."""
+    w = build_kernel_workload("flash_attention", time_mode="static")
+    fp = workload_fingerprint(w)
+
+    def run(engine):
+        s = GevoML(w, pop_size=10, n_elite=4, seed=7, engine=engine,
+                   operators={"attr_tweak": 1.0})
+        res = s.run(generations=3)
+        return res
+
+    rp = run("python")
+    rt = run("tensor")
+    assert [i.fitness for i in rp.population] \
+        == [i.fitness for i in rt.population]
+    assert [patch_key(fp, i.patch) for i in rp.population] \
+        == [patch_key(fp, i.patch) for i in rt.population]
+    assert [i.fitness for i in rp.pareto] == [i.fitness for i in rt.pareto]
+
+
+def test_unknown_engine_rejected():
+    w = build_kernel_workload("rmsnorm")
+    with pytest.raises(ValueError, match="engine"):
+        GevoML(w, engine="cuda")
+
+
+# ---- fallback when the workload can't vectorize -----------------------------
+
+def test_make_tensor_evaluator_fallback():
+    w = build_kernel_workload("rmsnorm", time_mode="static")
+    assert tensorizable(w)
+    ev = make_tensor_evaluator(w)
+    assert isinstance(ev, TensorEvaluator)
+    ev.close()
+
+    w.time_mode = "measured"                      # wall clock: no batching
+    assert not tensorizable(w)
+    ev = make_tensor_evaluator(w)
+    assert not isinstance(ev, TensorEvaluator)
+    ev.close()
+    with pytest.raises(ValueError, match="tensorizable"):
+        TensorEvaluator(w)
+
+
+# ---- TensorGevoML: search + checkpoint/resume -------------------------------
+
+def test_tensor_engine_resume_bit_exact(tmp_path):
+    w = build_kernel_workload("mamba_scan", time_mode="static")
+
+    def fitnesses(res):
+        return [i.fitness for i in res.population]
+
+    with TensorGevoML(w, pop_size=16, n_elite=4, seed=3,
+                      checkpoint_dir=str(tmp_path / "a")) as full:
+        r_full = full.run(generations=4)
+    with TensorGevoML(w, pop_size=16, n_elite=4, seed=3,
+                      checkpoint_dir=str(tmp_path / "b")) as eng:
+        eng.run(generations=2)
+    with TensorGevoML(w, pop_size=16, n_elite=4, seed=3,
+                      checkpoint_dir=str(tmp_path / "b")) as eng2:
+        r_res = eng2.run(generations=4, resume=True)
+    assert fitnesses(r_full) == fitnesses(r_res)
+    assert [i.fitness for i in r_full.pareto] \
+        == [i.fitness for i in r_res.pareto]
+    assert r_full.history[-1]["evals"] == r_res.history[-1]["evals"]
+
+
+def test_tensor_engine_checkpoint_guards_fingerprint(tmp_path):
+    w1 = build_kernel_workload("rmsnorm")
+    with TensorGevoML(w1, pop_size=8, n_elite=2, seed=0,
+                      checkpoint_dir=str(tmp_path)) as eng:
+        eng.run(generations=1)
+    w2 = build_kernel_workload("flash_attention")
+    with TensorGevoML(w2, pop_size=8, n_elite=2, seed=0,
+                      checkpoint_dir=str(tmp_path)) as eng2:
+        with pytest.raises(ValueError, match="fingerprint"):
+            eng2.run(generations=2, resume=True)
+
+
+# ---- mesh island fleet ------------------------------------------------------
+
+def test_mesh_fleet_runs_and_resumes(tmp_path):
+    w = build_kernel_workload("rmsnorm")
+    root = str(tmp_path)
+    with TensorIslandFleet(w, root_dir=root, n_islands=2, pop_size=8,
+                           n_elite=2, migrate_every=2, n_migrants=2,
+                           seed=1) as fleet:
+        res = fleet.run(3)
+    assert len(res.islands) == 2
+    assert res.cache_stats["writer_tags"] == ["tensor:0", "tensor:1"]
+    assert len(res.pareto) >= 1
+    assert len(res.migration_log) == 1            # one epoch boundary at gen 2
+    manifest = json.load(open(tmp_path / "manifest.json"))
+    assert manifest["backend"] == "mesh"
+    with TensorIslandFleet(w, root_dir=root, n_islands=2, pop_size=8,
+                           n_elite=2, migrate_every=2, n_migrants=2,
+                           seed=1) as fleet2:
+        res2 = fleet2.run(5, resume=True)
+    assert len(res2.migration_log) == 2
+    assert min(i.fitness[0] for i in res2.pareto) \
+        <= min(i.fitness[0] for i in res.pareto)
+
+
+def test_orchestrator_mesh_backend_delegates(tmp_path):
+    w = build_kernel_workload("rmsnorm")
+    orch = IslandOrchestrator(w, root_dir=str(tmp_path), n_islands=2,
+                              pop_size=8, n_elite=2, backend="mesh")
+    res = orch.run(2)
+    assert len(res.islands) == 2
+    assert sorted(res.cache_stats["per_island"]) == res.names
+    with pytest.raises(ValueError, match="on_generation"):
+        orch.run(2, on_generation=lambda *a: None)
+    with pytest.raises(ValueError, match="backend"):
+        IslandOrchestrator(w, root_dir=str(tmp_path), backend="gpu")
+
+
+def test_mesh_writer_tags_are_axis_indexed():
+    tags = [mesh_writer_tag(i) for i in range(8)]
+    assert tags == [f"tensor:{i}" for i in range(8)]
+    assert len(set(tags)) == len(tags)
