@@ -1,7 +1,7 @@
 """§Perf A/B measurements.
 
-Seven suites (select with
-``--suite {cells,evaluator,operators,kernels,islands,serving,tensor_evo,all}``):
+Eight suites (select with ``--suite {cells,evaluator,operators,kernels,
+islands,serving,tensor_evo,analysis,all}``):
 
 * ``cells`` (default) — for each hillclimbed model cell, measures (under the
   FINAL roofline analyzer, so numbers are comparable) the paper-faithful
@@ -50,6 +50,16 @@ Seven suites (select with
   (4 mesh islands x pop 1024 x 4 generations = 16384 genome-evals vs the
   original 140) against an equal-budget panmictic tensor run, writing
   experiments/perf/tensor_evo_ab.json (results quoted in EXPERIMENTS.md).
+
+* ``analysis`` — A/Bs the static patch screen (``core.analysis``) on the
+  2fcNet IR search and the joint three-kernel schedule search: the same
+  seeded ``GevoML`` run with and without the pre-execution classifier, at an
+  equal genome budget.  Asserts the exported Pareto fronts are
+  byte-identical (screening must not change the search, only skip
+  executions) and that >= 20% of cache-missing mutants resolve statically;
+  reports the skip rate, screen-verdict histogram, and the per-operator
+  invalid/noop/equivalent table, writing experiments/perf/analysis_ab.json
+  (results quoted in EXPERIMENTS.md).
 
   PYTHONPATH=src python -m benchmarks.perf_ab
   PYTHONPATH=src python -m benchmarks.perf_ab --suite evaluator --workers 2
@@ -710,6 +720,103 @@ def tensor_evo_ab(seed: int = 0, pop: int = 1024,
     return out
 
 
+def analysis_ab(generations: int = 12, seed: int = 0) -> dict:
+    """Screened vs unscreened ``GevoML`` — same seed, same budget, byte-
+    identical exported Pareto fronts; the A/B isolates the static screen.
+
+    Two searches: the 2fcNet IR search (program screen: DCE + constant
+    folding + canonical fingerprints) and the joint three-kernel schedule
+    search (kernel screen: decode + launch gates + genome canon).  Both run
+    in ``static`` fitness mode, where verdict inheritance is exact, so the
+    screened arm must reproduce the unscreened arm's front byte for byte
+    while skipping the executions the screen resolved."""
+    import tempfile
+
+    from repro.core.evaluator import SerialEvaluator
+    from repro.core.search import GevoML
+    from repro.kernels.workloads import build_joint_kernel_workload
+    from repro.workloads.twofc import build_twofc_training_workload
+
+    root = tempfile.mkdtemp(prefix="gevoml_analysis_ab_")
+
+    def arm(tag, workload, *, screen, gens, **gevo_kw):
+        ev = SerialEvaluator(workload)
+        s = GevoML(workload, seed=seed, evaluator=ev, screen=screen,
+                   **gevo_kw)
+        t0 = time.perf_counter()
+        res = s.run(generations=gens)
+        wall = time.perf_counter() - t0
+        front_path = os.path.join(root, f"{tag}.json")
+        res.export_front(front_path)
+        st = ev.stats()
+        rec = {"wall_s": round(wall, 4),
+               "n_evals": st["n_evals"],
+               "n_screened": st["n_screened"],
+               "screened_by": st["screened_by"],
+               "pareto": sorted(list(i.fitness) for i in res.pareto),
+               "population": [list(i.fitness) for i in res.population],
+               "per_operator": res.operator_stats()}
+        ev.close()
+        return rec, front_path
+
+    out: dict = {"generations": generations, "seed": seed, "searches": {}}
+    searches = {
+        "twofc": (build_twofc_training_workload(
+                      batch=32, hidden=16, steps=5,
+                      n_train=256, n_test=200),
+                  dict(pop_size=10, n_elite=5)),
+        "joint_kernels": (build_joint_kernel_workload(),
+                          dict(pop_size=10, n_elite=5, init_mutations=2,
+                               mutation_rate=0.9,
+                               operators={"attr_tweak": 1.0})),
+    }
+    tot_screened = tot_missed = 0
+    for name, (w, kw) in searches.items():
+        base, base_front = arm(f"{name}_unscreened", w, screen=False,
+                               gens=generations, **kw)
+        scr, scr_front = arm(f"{name}_screened", w, screen=True,
+                             gens=generations, **kw)
+        front_equal = (open(base_front, "rb").read()
+                       == open(scr_front, "rb").read())
+        # the bit-exactness bar: identical exported front BYTES and
+        # identical final population fitness, at the same genome budget
+        assert front_equal, \
+            f"{name}: screened front diverged from unscreened"
+        assert base["population"] == scr["population"], \
+            f"{name}: screened population fitness diverged"
+        missed = scr["n_evals"] + scr["n_screened"]
+        skip = scr["n_screened"] / max(missed, 1)
+        tot_screened += scr["n_screened"]
+        tot_missed += missed
+        out["searches"][name] = {
+            "unscreened": {k: base[k] for k in
+                           ("wall_s", "n_evals", "pareto")},
+            "screened": {k: scr[k] for k in
+                         ("wall_s", "n_evals", "n_screened", "screened_by",
+                          "pareto", "per_operator")},
+            "front_bytes_equal": front_equal,
+            "executions_skipped": base["n_evals"] - scr["n_evals"],
+            "skip_rate": round(skip, 4),
+        }
+        print(f"[analysis_ab] {name}: fronts byte-equal; "
+              f"{base['n_evals']} evals unscreened vs {scr['n_evals']} "
+              f"screened ({scr['n_screened']} resolved statically, "
+              f"skip rate {skip:.0%}, verdicts {scr['screened_by']})")
+    out["skip_rate_overall"] = round(tot_screened / max(tot_missed, 1), 4)
+    # the acceptance bar (see ISSUE/EXPERIMENTS.md): fronts byte-identical
+    # (asserted above) and >= 20% of proposed cache-missing mutants
+    # resolved without execution
+    assert out["skip_rate_overall"] >= 0.20, \
+        (f"static screen resolved only {out['skip_rate_overall']:.0%} of "
+         f"cache-missing mutants (bar: 20%)")
+    os.makedirs(OUT, exist_ok=True)
+    path = os.path.join(OUT, "analysis_ab.json")
+    json.dump(out, open(path, "w"), indent=1)
+    print(f"[analysis_ab] wrote {path}; fronts byte-identical, overall "
+          f"skip rate {out['skip_rate_overall']:.0%}")
+    return out
+
+
 def run_cells():
     os.makedirs(OUT, exist_ok=True)
 
@@ -762,7 +869,8 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--suite",
                     choices=("cells", "evaluator", "operators", "kernels",
-                             "islands", "serving", "tensor_evo", "all"),
+                             "islands", "serving", "tensor_evo", "analysis",
+                             "all"),
                     default="cells")
     ap.add_argument("--workers", type=int, default=2,
                     help="ParallelEvaluator workers for --suite evaluator")
@@ -782,6 +890,8 @@ def main():
         serving_ab(generations=min(args.generations, 3))
     if args.suite in ("tensor_evo", "all"):
         tensor_evo_ab()
+    if args.suite in ("analysis", "all"):
+        analysis_ab(generations=max(args.generations, 12))
 
 
 if __name__ == "__main__":

@@ -158,8 +158,39 @@ def suite_headlines(d: str = PERF_DIR) -> None:
               f"({tv['budget_ratio_vs_pr4']}x the PR-4 budget, "
               f"{tv['islands']['cross_island_hits']} cross-island cache "
               f"hits) |")
-    if not any((ev, op, kn, isl, sv, tv)):
+    an = load("analysis_ab.json")
+    if an:
+        per = "; ".join(
+            f"{k}: {r['skip_rate']:.0%}"
+            for k, r in an["searches"].items())
+        print(f"| analysis | static screen: fronts byte-identical screened "
+              f"vs unscreened at equal genome budget; "
+              f"{an['skip_rate_overall']:.0%} of cache-missing mutants "
+              f"resolved without execution ({per}) |")
+    if not any((ev, op, kn, isl, sv, tv, an)):
         print(f"| (none) | no *_ab.json suite records under {d} |")
+
+
+def analysis_screen_table(d: str = PERF_DIR) -> None:
+    """§Static triage: per-operator proposed/applied + screen-verdict
+    counts from the screened ``analysis_ab`` arms."""
+    p = os.path.join(d, "analysis_ab.json")
+    if not os.path.exists(p):
+        return
+    an = json.load(open(p))
+    print("\n| search | operator | proposed | applied | invalid | noop | "
+          "equivalent |")
+    print("|---|---|---|---|---|---|---|")
+    for name, rec in an["searches"].items():
+        for op_name, row in sorted(
+                rec["screened"]["per_operator"].items()):
+            print(f"| {name} | {op_name} | {row['proposed']} | "
+                  f"{row['applied']} | {row.get('invalid', 0)} | "
+                  f"{row.get('noop', 0)} | {row.get('equivalent', 0)} |")
+    print("\nScreen-verdict counts are per *edit*, like the valid/elite "
+          "counters: a screened patch contributes one count per edit it "
+          "carries.  Since patches inherit their parents' edits, a kind's "
+          "screen counts can exceed its own proposal count.")
 
 
 def main():
@@ -175,6 +206,7 @@ def main():
     if args.experiments:
         perf_cell_table(args.dir or PERF_DIR)
         suite_headlines(args.dir or PERF_DIR)
+        analysis_screen_table(args.dir or PERF_DIR)
     else:
         dryrun_report(args.mesh, args.dir)
 

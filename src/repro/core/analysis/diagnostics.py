@@ -1,0 +1,96 @@
+"""Structured diagnostics — one message type for gates, linters, and screens.
+
+Before this module existed the VMEM/divisibility gate text lived as bare
+f-strings inside ``kernels/costs.py`` (``_block_msg`` / ``_vmem_msg``), and
+any tool that wanted to *explain* a failed gate had to re-derive the wording
+— a drift hazard, because the tensor-engine parity tests assert the exact
+bytes of those messages.  A :class:`Diagnostic` packages the same message
+with machine-readable structure (code, severity, the knob at fault) plus an
+optional fix ``hint``; the cost model's scalar gate raisers and the schedule
+linter both build their text through the constructors below, so the message
+a failed config raises at evaluation time is byte-identical to the one
+``python -m repro.core.analysis lint`` prints next to its fix hint.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+SEVERITIES = ("error", "warning", "info")
+
+# diagnostic codes used by the built-in gates / linter
+BLOCK_DIVISIBILITY = "block-divisibility"
+VMEM_CAPACITY = "vmem-capacity"
+SCHEDULE_DECODE = "schedule-decode"
+SCHEDULE_OK = "schedule-ok"
+KNOB_INERT = "knob-inert"
+
+
+@dataclass(frozen=True)
+class Diagnostic:
+    """One structured finding about a schedule (or program) configuration.
+
+    ``message`` is the human line — for gate diagnostics it is exactly the
+    :class:`~repro.core.fitness.InvalidVariant` text the evaluator would
+    raise, so linting and evaluating can never tell a different story.
+    ``knob`` names the schedule knob at fault (when one is), and ``hint``
+    carries an actionable fix ("choose a block from ...")."""
+
+    code: str
+    severity: str
+    subject: str
+    message: str
+    knob: str | None = None
+    hint: str | None = None
+
+    def __post_init__(self):
+        if self.severity not in SEVERITIES:
+            raise ValueError(f"unknown severity {self.severity!r}; "
+                             f"choose from {SEVERITIES}")
+
+    @property
+    def is_error(self) -> bool:
+        return self.severity == "error"
+
+    def format(self) -> str:
+        """The CLI line: ``severity[code] message  (hint: ...)``."""
+        out = f"{self.severity}[{self.code}] {self.message}"
+        if self.hint:
+            out += f"  (hint: {self.hint})"
+        return out
+
+    def to_doc(self) -> dict:
+        return {"code": self.code, "severity": self.severity,
+                "subject": self.subject, "message": self.message,
+                "knob": self.knob, "hint": self.hint}
+
+    @staticmethod
+    def from_doc(d: dict) -> "Diagnostic":
+        return Diagnostic(code=d["code"], severity=d["severity"],
+                          subject=d["subject"], message=d["message"],
+                          knob=d.get("knob"), hint=d.get("hint"))
+
+
+# -- gate-message constructors (the single source of the gate text) ----------
+
+def block_divisibility(subject: str, dim: int, block: int, *,
+                       knob: str | None = None,
+                       hint: str | None = None) -> Diagnostic:
+    """A block size that does not divide its grid dimension.  The message is
+    the historical ``_block_msg`` text, byte-for-byte."""
+    return Diagnostic(
+        code=BLOCK_DIVISIBILITY, severity="error", subject=subject,
+        message=f"{subject}: block {block} does not divide dim {dim}",
+        knob=knob, hint=hint)
+
+
+def vmem_capacity(subject: str, used: int, vmem_bytes: int, *,
+                  knob: str | None = None,
+                  hint: str | None = None) -> Diagnostic:
+    """A working set that exceeds per-core VMEM.  The message is the
+    historical ``_vmem_msg`` text, byte-for-byte."""
+    return Diagnostic(
+        code=VMEM_CAPACITY, severity="error", subject=subject,
+        message=(f"{subject}: VMEM working set {used / 2**20:.1f} MB exceeds "
+                 f"{vmem_bytes / 2**20:.0f} MB — config would not launch"),
+        knob=knob, hint=hint)

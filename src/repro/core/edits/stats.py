@@ -12,7 +12,11 @@ search loop increments them and snapshots them into each
 * ``valid``    — edits of this kind contained in individuals that evaluated
   successfully;
 * ``elite``    — edits of this kind contained in elite individuals, summed
-  over generations (survival: an edit kept across generations re-counts).
+  over generations (survival: an edit kept across generations re-counts);
+* ``invalid`` / ``noop`` / ``equivalent`` — edits of this kind contained in
+  candidates the static patch screen (:mod:`repro.core.analysis`) resolved
+  without execution, by verdict — the paper's per-operator attribution of
+  where wasted evaluations come from.  All zero when screening is off.
 """
 
 from __future__ import annotations
@@ -21,7 +25,9 @@ from typing import Iterable
 
 from .base import registered_ops
 
-_FIELDS = ("proposed", "applied", "valid", "elite")
+_FIELDS = ("proposed", "applied", "valid", "elite",
+           "invalid", "noop", "equivalent")
+SCREEN_FIELDS = ("invalid", "noop", "equivalent")
 
 
 class OperatorStats:
@@ -56,6 +62,13 @@ class OperatorStats:
     def count_elite(self, kinds: Iterable[str]) -> None:
         for k in kinds:
             self._row(k)["elite"] += 1
+
+    def count_screened(self, kinds: Iterable[str], verdict: str) -> None:
+        """Attribute one statically screened candidate to its edit kinds."""
+        if verdict not in SCREEN_FIELDS:
+            return   # "novel" (and anything future) executes; nothing to count
+        for k in kinds:
+            self._row(k)[verdict] += 1
 
     def snapshot(self) -> dict[str, dict[str, int]]:
         """Sorted deep copy, safe to embed in history rows / checkpoints."""

@@ -53,24 +53,31 @@ from .serialize import patch_key, program_fingerprint
 @dataclass(frozen=True)
 class EvalOutcome:
     """Result of evaluating one patch: a fitness tuple or an invalidity
-    reason.  ``cached`` marks outcomes served from the cache."""
+    reason.  ``cached`` marks outcomes served from the cache; ``verdict``
+    names the static-screen label (``invalid``/``noop``/``equivalent``) when
+    the outcome was resolved without execution (None for executed ones)."""
 
     fitness: tuple[float, float] | None
     error: str | None = None
     cached: bool = False
+    verdict: str | None = None
 
     @property
     def ok(self) -> bool:
         return self.fitness is not None
 
     def to_doc(self) -> dict:
-        return {"fitness": list(self.fitness) if self.fitness else None,
-                "error": self.error}
+        doc = {"fitness": list(self.fitness) if self.fitness else None,
+               "error": self.error}
+        if self.verdict is not None:
+            doc["verdict"] = self.verdict
+        return doc
 
     @staticmethod
     def from_doc(d: dict) -> "EvalOutcome":
         fit = tuple(d["fitness"]) if d.get("fitness") else None
-        return EvalOutcome(fitness=fit, error=d.get("error"))
+        return EvalOutcome(fitness=fit, error=d.get("error"),
+                           verdict=d.get("verdict"))
 
 
 # --------------------------------------------------------------------------
@@ -159,22 +166,32 @@ class FitnessCache:
         if out is None:
             return None
         author = self._writers.get(key)
-        if author is not None and author != self.writer:
-            self.cross_hits += 1
+        if author is not None:
+            # "analysis:<writer>" records are authored by <writer>'s screen;
+            # a bare "analysis" tag (anonymous cache) names nobody.
+            base = author[len("analysis:"):] \
+                if author.startswith("analysis:") else author
+            if base != "analysis" and base != self.writer:
+                self.cross_hits += 1
         return replace(out, cached=True)
 
-    def put(self, key: str, outcome: EvalOutcome) -> None:
+    def put(self, key: str, outcome: EvalOutcome, *,
+            writer: str | None = None) -> None:
+        """Record an outcome.  ``writer`` overrides this cache's author tag
+        for the one record (the evaluator tags statically screened verdicts
+        ``analysis:<writer>`` so cache files show what was never executed)."""
         if key in self._mem:
             return
+        author = writer if writer is not None else self.writer
         outcome = replace(outcome, cached=False)
         self._mem[key] = outcome
-        if self.writer is not None:
-            self._writers[key] = self.writer
+        if author is not None:
+            self._writers[key] = author
         if self._fd is not None and (outcome.ok or self.persist_invalid):
             rec = {"key": key}
             rec.update(outcome.to_doc())
-            if self.writer is not None:
-                rec["writer"] = self.writer
+            if author is not None:
+                rec["writer"] = author
             self._append_line(json.dumps(rec) + "\n")
 
     def _append_line(self, line: str) -> None:
@@ -300,17 +317,32 @@ class Evaluator:
 
     ``evaluate_batch`` preserves input order, dedupes identical patches
     within the batch, serves cache hits without dispatch, and records every
-    fresh outcome (valid or invalid) back into the cache."""
+    fresh outcome (valid or invalid) back into the cache.
+
+    Attaching a patch ``screen`` (see :func:`repro.core.analysis.make_screen`)
+    adds a static pre-execution triage on cache misses: patches the screen
+    resolves — ``invalid`` / ``noop`` / ``equivalent`` — skip execution, carry
+    their verdict on the outcome, and are cached under an ``analysis:`` writer
+    tag; only ``novel`` patches dispatch.  Screening is fitness-transparent:
+    resolved outcomes are exactly what execution would have produced (the
+    screens only resolve when that is statically certain)."""
 
     def __init__(self, workload, cache: FitnessCache | None = None):
         self.workload = workload
         self.cache = cache if cache is not None else FitnessCache()
         self.fingerprint = workload_fingerprint(workload)
+        self.screen = None  # optional static patch screen (core.analysis)
         self.n_evals = 0    # actual executions (cache misses evaluated)
         self.n_invalid = 0  # executions that came back invalid
+        self.n_screened = 0  # misses resolved statically, no execution
+        self.screened_by: dict[str, int] = {}  # verdict -> count
 
     def key(self, patch) -> str:
         return patch_key(self.fingerprint, patch)
+
+    def _screen_writer(self) -> str:
+        w = self.cache.writer
+        return f"analysis:{w}" if w is not None else "analysis"
 
     def evaluate_batch(self, patches) -> list[EvalOutcome]:
         patches = [Patch.coerce(p) for p in patches]
@@ -327,16 +359,60 @@ class Evaluator:
                     self.cache.misses += 1
                 fresh.setdefault(k, []).append(i)
         if fresh:
-            todo = [patches[ixs[0]] for ixs in fresh.values()]
-            results = self._evaluate_misses(todo)
-            for (k, ixs), out in zip(fresh.items(), results):
-                self.cache.put(k, out)
-                self.n_evals += 1
-                if not out.ok:
-                    self.n_invalid += 1
+            screened, executed = self._triage(
+                {k: patches[ixs[0]] for k, ixs in fresh.items()})
+            for k, ixs in fresh.items():
+                if k in screened:
+                    out = screened[k]
+                    self.n_screened += 1
+                    self.screened_by[out.verdict] = \
+                        self.screened_by.get(out.verdict, 0) + 1
+                    self.cache.put(k, out, writer=self._screen_writer())
+                else:
+                    out = executed[k]
+                    self.cache.put(k, out)
+                    self.n_evals += 1
+                    if not out.ok:
+                        self.n_invalid += 1
                 for i in ixs:
                     outcomes[i] = out
         return outcomes  # type: ignore[return-value]
+
+    def _triage(self, fresh: dict[str, Patch]
+                ) -> tuple[dict[str, EvalOutcome], dict[str, EvalOutcome]]:
+        """Split cache-missing patches into statically resolved outcomes and
+        executed ones.  Without a screen every patch executes (the historical
+        behavior, bit for bit)."""
+        if self.screen is None:
+            results = self._evaluate_misses(list(fresh.values()))
+            return {}, dict(zip(fresh.keys(), results))
+        screened: dict[str, EvalOutcome] = {}
+        deferred: list[tuple[str, object]] = []  # inherit from this batch
+        pending: set[str] = set()  # canonical classes executing in-batch
+        todo_keys: list[str] = []
+        todo_res: list[object] = []
+        for k, patch in fresh.items():
+            res = self.screen.classify(patch)
+            if res.resolved:
+                screened[k] = replace(res.outcome, verdict=res.label)
+            elif res.canon is not None and res.canon in pending:
+                deferred.append((k, res))
+            else:
+                if res.canon is not None:
+                    pending.add(res.canon)
+                todo_keys.append(k)
+                todo_res.append(res)
+        executed = dict(zip(
+            todo_keys,
+            self._evaluate_misses([fresh[k] for k in todo_keys])
+            if todo_keys else []))   # fully screened batch: no dispatch
+        for k, res in zip(todo_keys, todo_res):
+            self.screen.observe(res, executed[k])
+        for k, res in deferred:
+            rep = self.screen.seen[res.canon]
+            screened[k] = replace(self.screen.inherit(res, rep),
+                                  verdict=self.screen.label_for(res.canon))
+        return screened, executed
 
     def evaluate_one(self, patch) -> EvalOutcome:
         return self.evaluate_batch([patch])[0]
@@ -356,7 +432,9 @@ class Evaluator:
 
     def stats(self) -> dict:
         s = self.cache.stats()
-        s.update({"n_evals": self.n_evals, "n_invalid": self.n_invalid})
+        s.update({"n_evals": self.n_evals, "n_invalid": self.n_invalid,
+                  "n_screened": self.n_screened,
+                  "screened_by": dict(self.screened_by)})
         return s
 
     def close(self) -> None:
@@ -457,11 +535,20 @@ class ParallelEvaluator(Evaluator):
 
 def make_evaluator(workload, *, parallel: int = 0,
                    cache_path: str | None = None,
-                   inline_static: bool = False) -> Evaluator:
+                   inline_static: bool = False,
+                   screen: bool = False) -> Evaluator:
     """Convenience constructor used by the CLI surfaces (examples,
-    benchmarks): ``parallel`` <= 1 gives a SerialEvaluator."""
+    benchmarks): ``parallel`` <= 1 gives a SerialEvaluator.  ``screen=True``
+    attaches the static patch screen (``core.analysis``) so invalid / noop /
+    equivalent mutants resolve without execution."""
     cache = FitnessCache(cache_path)
     if parallel and parallel > 1:
-        return ParallelEvaluator(workload, n_workers=parallel, cache=cache,
-                                 inline_static=inline_static)
-    return SerialEvaluator(workload, cache=cache)
+        ev: Evaluator = ParallelEvaluator(
+            workload, n_workers=parallel, cache=cache,
+            inline_static=inline_static)
+    else:
+        ev = SerialEvaluator(workload, cache=cache)
+    if screen:
+        from .analysis import make_screen   # local: analysis imports us
+        ev.screen = make_screen(workload)
+    return ev

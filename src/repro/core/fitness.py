@@ -136,6 +136,11 @@ class KernelWorkload:
     # the fingerprint: it is an evaluation *strategy*, not a protocol change
     # (the batched path is bit-exact with the serial one).
     tensor_spec: object | None = None
+    # launchability probe: the same static gate check the runner performs
+    # first (``schedule_time`` raising InvalidVariant), exposed so the patch
+    # screen (core.analysis) can reject un-launchable genomes without
+    # executing anything.  Optional and advisory — also not fingerprinted.
+    static_probe: Callable[[dict], float] | None = None
 
     def evaluate(self, program: Program) -> tuple[float, float]:
         try:

@@ -122,7 +122,7 @@ class IslandOrchestrator:
                  n_elite: int | None = None, max_tries: int = 40,
                  processes: bool = False, eval_workers: int = 0,
                  cache_path: str | None = None, verbose: bool = False,
-                 backend: str = "processes"):
+                 backend: str = "processes", screen: bool = False):
         if backend not in self.BACKENDS:
             raise ValueError(f"unknown backend {backend!r}; "
                              f"choose from {self.BACKENDS}")
@@ -148,6 +148,7 @@ class IslandOrchestrator:
         self.max_tries = max_tries
         self.processes = processes
         self.eval_workers = eval_workers
+        self.screen = screen   # static patch screen on every island
         self.cache_path = cache_path or os.path.join(root_dir, "cache.jsonl")
         self.verbose = verbose
         self.fingerprint = workload_fingerprint(workload)
@@ -243,7 +244,8 @@ class IslandOrchestrator:
                 max_tries=self.max_tries,
                 eval_workers=self.eval_workers,
                 verbose=False,
-                inline=not self.processes)
+                inline=not self.processes,
+                screen=self.screen)
             if on_generation is not None:
                 if self.processes:
                     raise ValueError("on_generation requires in-process "

@@ -30,7 +30,8 @@ def island_payload(workload, spec: IslandSpec, *, checkpoint_dir: str,
                    cache_path: str | None, generations: int, resume: bool,
                    migrants: list[dict] | None, pop_size: int,
                    n_elite: int, max_tries: int, eval_workers: int = 0,
-                   verbose: bool = False, inline: bool = True) -> dict:
+                   verbose: bool = False, inline: bool = True,
+                   screen: bool = False) -> dict:
     """Build the (picklable, unless ``inline``) argument doc for
     :func:`run_island_epoch`.  ``inline=True`` keeps the live workload
     object for in-process execution; ``inline=False`` converts it to
@@ -47,6 +48,7 @@ def island_payload(workload, spec: IslandSpec, *, checkpoint_dir: str,
         "max_tries": max_tries,
         "eval_workers": eval_workers,
         "verbose": verbose,
+        "screen": screen,
     }
     if inline:
         payload["workload"] = workload
@@ -115,7 +117,8 @@ def run_island_epoch(payload: dict) -> dict:
             verbose=payload.get("verbose", False),
             operators=spec.operators,
             evaluator=evaluator,
-            checkpoint_dir=payload["checkpoint_dir"])
+            checkpoint_dir=payload["checkpoint_dir"],
+            screen=payload.get("screen", False))
         search.run(
             generations=payload["generations"],
             resume=payload["resume"],

@@ -45,7 +45,8 @@ import numpy as np
 from .crossover import messy_crossover
 from .edits import (Edit, EditError, OperatorStats, OperatorWeights, Patch,
                     sample_edit)
-from .evaluator import Evaluator, FitnessCache, SerialEvaluator
+from .evaluator import (Evaluator, EvalOutcome, FitnessCache,
+                        SerialEvaluator)
 from .fitness import InvalidVariant
 from .nsga2 import pareto_front, rank_select, tournament
 from .serialize import (atomic_write_json, patch_doc, patch_from_doc,
@@ -146,7 +147,7 @@ class GevoML:
                  evaluator: Evaluator | None = None,
                  cache_path: str | None = None,
                  checkpoint_dir: str | None = None,
-                 engine: str = "python"):
+                 engine: str = "python", screen: bool = False):
         if engine not in self.ENGINES:
             raise ValueError(f"unknown engine {engine!r}; "
                              f"choose from {self.ENGINES}")
@@ -174,6 +175,11 @@ class GevoML:
             raise ValueError("pass cache_path OR a pre-built evaluator "
                              "(give its FitnessCache the path), not both")
         self.evaluator = evaluator
+        if screen and getattr(self.evaluator, "screen", None) is None:
+            # static pre-execution triage (invalid/noop/equivalent mutants
+            # skip evaluation; fitness outcomes are unchanged bit-for-bit)
+            from .analysis import make_screen
+            self.evaluator.screen = make_screen(workload)
         if engine == "tensor":
             from .tensor_evo import nsga2 as _tnsga
             self._rank_select = _tnsga.rank_select
@@ -263,6 +269,7 @@ class GevoML:
     # -- batched fill: speculate candidates, evaluate as one dispatch ------
     def _fill(self, n: int, candidate_fn, what: str) -> list[Individual]:
         filled: list[Individual] = []
+        counted: dict[int, EvalOutcome] = {}  # freshly screened, by identity
         for _ in range(self.max_tries):
             if len(filled) >= n:
                 break
@@ -274,6 +281,14 @@ class GevoML:
             if not batch:
                 continue
             for patch, out in zip(batch, self.evaluator.evaluate_batch(batch)):
+                if (out.verdict is not None and not out.cached
+                        and id(out) not in counted):
+                    # freshly screened this call: per-operator attribution.
+                    # Duplicate patches in a batch share one outcome object,
+                    # so identity dedupes them (the dict holds the reference,
+                    # keeping ids stable for the loop's lifetime).
+                    counted[id(out)] = out
+                    self.stats.count_screened(patch.kinds(), out.verdict)
                 if out.ok:
                     filled.append(Individual(patch, out.fitness))
                     self.stats.count_valid(patch.kinds())
@@ -375,6 +390,8 @@ class GevoML:
             ev_stats = state["counters"]["evaluator"]
             self.evaluator.n_evals = ev_stats["n_evals"]
             self.evaluator.n_invalid = ev_stats["n_invalid"]
+            self.evaluator.n_screened = ev_stats.get("n_screened", 0)
+            self.evaluator.screened_by = dict(ev_stats.get("screened_by", {}))
             self.evaluator.cache.hits = ev_stats["hits"]
             self.evaluator.cache.misses = ev_stats["misses"]
             self.evaluator.cache.cross_hits = ev_stats.get("cross_hits", 0)
@@ -416,6 +433,7 @@ class GevoML:
                 "pareto_size": len(pf),
                 "evals": self.n_evals,
                 "invalid": self.n_invalid,
+                "screened": self.evaluator.n_screened,
                 "cache_hits": self.cache.hits,
                 "cache_hit_rate": round(self.cache.hit_rate, 4),
                 "operators": self.stats.snapshot(),

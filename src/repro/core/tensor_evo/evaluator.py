@@ -104,11 +104,20 @@ class TensorEvaluator(Evaluator):
 
 
 def make_tensor_evaluator(workload, *, cache: FitnessCache | None = None,
-                          n_workers: int = 2) -> Evaluator:
+                          n_workers: int = 2,
+                          screen: bool = False) -> Evaluator:
     """TensorEvaluator when the workload vectorizes, else the process-pool
     fallback (``ParallelEvaluator`` with static short-circuiting) — the
-    engine never refuses a workload, it just loses the batching win."""
+    engine never refuses a workload, it just loses the batching win.
+    ``screen=True`` attaches the static patch screen (``core.analysis``):
+    the inherited ``evaluate_batch`` resolves invalid / noop / equivalent
+    mutants before they reach the batched (or pooled) dispatch."""
     if tensorizable(workload):
-        return TensorEvaluator(workload, cache=cache)
-    return ParallelEvaluator(workload, n_workers=n_workers, cache=cache,
-                             inline_static=True)
+        ev: Evaluator = TensorEvaluator(workload, cache=cache)
+    else:
+        ev = ParallelEvaluator(workload, n_workers=n_workers, cache=cache,
+                               inline_static=True)
+    if screen:
+        from ..analysis import make_screen
+        ev.screen = make_screen(workload)
+    return ev

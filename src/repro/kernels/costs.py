@@ -43,6 +43,7 @@ from __future__ import annotations
 
 import numpy as np
 
+from ..core.analysis.diagnostics import block_divisibility, vmem_capacity
 from ..core.fitness import HBM_BW, PEAK_FLOPS, InvalidVariant
 
 VMEM_BYTES = 16 * 2 ** 20   # per-core VMEM
@@ -56,25 +57,28 @@ def _pad(x, m):
 
 
 # -- gate bookkeeping ---------------------------------------------------------
-# A gate is ("block"|"vmem", ok, *message args).  The scalar wrappers raise
-# on the first failed gate; the batched path ANDs the ok lanes into `valid`
-# and reconstructs per-lane messages with `gate_message`.
+# A gate is ("block"|"vmem", ok, *message args, knobs) where ``knobs`` names
+# the schedule knob(s) the gate constrains.  The scalar wrappers raise on the
+# first failed gate; the batched path ANDs the ok lanes into `valid` and
+# reconstructs per-lane messages with `gate_message`; the schedule linter
+# (``core.analysis.lint``) turns the same tuples into per-knob Diagnostics.
+# Message text comes from ``core.analysis.diagnostics`` — ONE source, so the
+# cost model and the analyzer can never drift.
 
 def _block_msg(name, dim, block) -> str:
-    return f"{name}: block {block} does not divide dim {dim}"
+    return block_divisibility(name, dim, block).message
 
 
 def _vmem_msg(name, used) -> str:
-    return (f"{name}: VMEM working set {used / 2**20:.1f} MB exceeds "
-            f"{VMEM_BYTES / 2**20:.0f} MB — config would not launch")
+    return vmem_capacity(name, used, VMEM_BYTES).message
 
 
-def _block_gate(name, dim, block):
-    return ("block", (dim % block) == 0, name, dim, block)
+def _block_gate(name, dim, block, knob):
+    return ("block", (dim % block) == 0, name, dim, block, (knob,))
 
 
-def _vmem_gate(name, used):
-    return ("vmem", used <= VMEM_BYTES, name, used)
+def _vmem_gate(name, used, knobs):
+    return ("vmem", used <= VMEM_BYTES, name, used, tuple(knobs))
 
 
 def _raise_failed_gate(gates) -> None:
@@ -94,11 +98,11 @@ def gate_message(gates, lane: int) -> str | None:
         if not bool(np.asarray(ok).reshape(-1)[lane]
                     if np.ndim(ok) else ok):
             if kind == "block":
-                name, dim, block = args
+                name, dim, block = args[:3]
                 b = np.asarray(block).reshape(-1)
                 return _block_msg(name, int(dim),
                                   int(b[lane] if b.size > 1 else b[0]))
-            name, used = args
+            name, used = args[:2]
             u = np.asarray(used).reshape(-1)
             return _vmem_msg(name, int(u[lane] if u.size > 1 else u[0]))
     return None
@@ -120,8 +124,8 @@ def _rmsnorm_ref(xp, *, rows: int, d: int):
 
 def _rmsnorm_pallas(xp, block_rows, is_unfused, *, rows: int, d: int):
     block = xp.minimum(block_rows, rows)
-    gates = (_block_gate("rmsnorm", rows, block),
-             _vmem_gate("rmsnorm", 4 * (2 * block * d + d)))
+    gates = (_block_gate("rmsnorm", rows, block, "block_rows"),
+             _vmem_gate("rmsnorm", 4 * (2 * block * d + d), ("block_rows",)))
     traffic = (4 * (2 * rows * d + d)
                + xp.where(is_unfused, 4 * (2 * rows * d + d), 0))
     steps = rows // block
@@ -161,11 +165,12 @@ def _flash_ref(xp, *, B: int, H: int, S: int, hd: int):
 def _flash_pallas(xp, block_q, block_k, *, B: int, H: int, S: int, hd: int):
     bq = xp.minimum(block_q, S)
     bk = xp.minimum(block_k, S)
-    gates = (_block_gate("flash_attention q", S, bq),
-             _block_gate("flash_attention k", S, bk),
+    gates = (_block_gate("flash_attention q", S, bq, "block_q"),
+             _block_gate("flash_attention k", S, bk, "block_k"),
              _vmem_gate("flash_attention",
-                        4 * (bq * hd + 2 * bk * hd)          # q/k/v tiles
-                        + 4 * (bq * bk + bq * hd + 2 * bq)))  # scores+scratch
+                        4 * (bq * hd + 2 * bk * hd)           # q/k/v tiles
+                        + 4 * (bq * bk + bq * hd + 2 * bq),   # scores+scratch
+                        ("block_q", "block_k")))
     n_q, n_k = S // bq, S // bk
     pairs = B * H * n_q * n_k
     # MXU pads each matmul to (8, 128) output tiles; contraction unpadded.
@@ -213,9 +218,10 @@ def _mamba_ref(xp, *, Bt: int, L: int, D: int, N: int):
 def _mamba_pallas(xp, chunk_in, *, Bt: int, L: int, D: int, N: int):
     elems = Bt * L * D * N
     chunk = xp.minimum(chunk_in, L)
-    gates = (_block_gate("mamba_scan", L, chunk),
+    gates = (_block_gate("mamba_scan", L, chunk, "chunk"),
              _vmem_gate("mamba_scan",
-                        4 * (3 * chunk * D + 2 * chunk * N + D * N)))
+                        4 * (3 * chunk * D + 2 * chunk * N + D * N),
+                        ("chunk",)))
     traffic = 4 * (3 * Bt * L * D + 2 * Bt * L * N + D * N)
     steps = Bt * (L // chunk)
     t = (xp.maximum(6 * elems / VPU_FLOPS, traffic / HBM_BW)
@@ -281,3 +287,20 @@ def schedule_terms(xp, kernel: str, cols: dict, **shape):
     (see :data:`COL_SPECS`).  With ``xp=numpy`` this is bit-exact with
     :func:`schedule_time`; with ``xp=jax.numpy`` it is jit/vmap-traceable."""
     return _TERMS[kernel](xp, cols, **shape)
+
+
+def schedule_cols(kernel: str, genome: dict) -> dict:
+    """The cost columns of one scalar genome, per :data:`COL_SPECS`."""
+    return {col: (genome[knob] == flag) if flag is not None else genome[knob]
+            for col, knob, flag in COL_SPECS[kernel]}
+
+
+def schedule_gates(kernel: str, genome: dict, **shape):
+    """The launch-gate tuples one scalar genome faces on the given shape —
+    empty for ``ref`` impls (nothing to launch).  This is the linter's entry
+    point: same gates, same check order, same message args as the scalar
+    :func:`schedule_time` path."""
+    if genome.get("impl") == "ref":
+        return ()
+    _, _, gates = _TERMS[kernel](np, schedule_cols(kernel, genome), **shape)
+    return gates

@@ -172,8 +172,13 @@ def build_kernel_workload(kernel: str = "rmsnorm", *,
     inputs = _inputs(kernel, seed)
     ref_out = _ref_output(kernel, inputs)
 
+    def static_probe(genome: dict) -> float:
+        # the exact gate check the runner performs first, exposed for the
+        # static patch screen (raises InvalidVariant on failed gates)
+        return schedule_time(kernel, genome, **shape)
+
     def runner(genome: dict) -> tuple[float, float]:
-        t = schedule_time(kernel, genome, **shape)  # validates launchability
+        t = static_probe(genome)  # validates launchability
         err = _kernel_error(kernel, genome, inputs, ref_out)
         if time_mode == "measured":
             # jit the whole variant: the ref/epilogue paths are plain jnp
@@ -186,6 +191,7 @@ def build_kernel_workload(kernel: str = "rmsnorm", *,
         program=space.encode(BASELINES[kernel]),
         space=space,
         runner=runner,
+        static_probe=static_probe,
         time_mode=time_mode,
         spec=WorkloadSpec.make(
             "repro.kernels.workloads:build_kernel_workload",
@@ -242,7 +248,7 @@ def build_joint_kernel_workload(*, time_mode: str = "static",
         return {knob: genome[f"{kernel}.{knob}"]
                 for knob in _JOINT_SPACES[kernel]}
 
-    def runner(genome: dict) -> tuple[float, float]:
+    def static_probe(genome: dict) -> float:
         # gates first, in kernel order — the first unlaunchable kernel's
         # message is the variant's invalidity reason (matches the batched
         # path's first-invalid-block reporting)
@@ -250,6 +256,10 @@ def build_joint_kernel_workload(*, time_mode: str = "static",
         for kernel in KERNELS:
             t += schedule_time(kernel, sub_genome(genome, kernel),
                                **SHAPES[kernel])
+        return t
+
+    def runner(genome: dict) -> tuple[float, float]:
+        t = static_probe(genome)
         err = None
         for kernel in KERNELS:
             e = _kernel_error(kernel, sub_genome(genome, kernel),
@@ -275,6 +285,7 @@ def build_joint_kernel_workload(*, time_mode: str = "static",
         program=space.encode(baseline),
         space=space,
         runner=runner,
+        static_probe=static_probe,
         time_mode=time_mode,
         spec=WorkloadSpec.make(
             "repro.kernels.workloads:build_joint_kernel_workload",

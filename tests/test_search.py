@@ -62,8 +62,9 @@ def test_describe_patch(result):
 
 
 def test_history_carries_per_operator_stats(result):
-    """Every history row snapshots proposed/valid/elite for the sampled
-    operator mix (default weights = every universal operator)."""
+    """Every history row snapshots proposed/valid/elite plus the static
+    screen verdicts for the sampled operator mix (default weights = every
+    universal operator)."""
     from repro.core.edits import get_edit_op
     universal = tuple(n for n in registered_ops()
                       if get_edit_op(n).universal)
@@ -71,7 +72,9 @@ def test_history_carries_per_operator_stats(result):
         ops = row["operators"]
         assert tuple(sorted(ops)) == universal
         for counters in ops.values():
-            assert set(counters) == {"proposed", "applied", "valid", "elite"}
+            assert set(counters) == {"proposed", "applied", "valid",
+                                     "elite", "invalid", "noop",
+                                     "equivalent"}
             assert all(v >= 0 for v in counters.values())
             assert counters["applied"] <= counters["proposed"]
     last = result.history[-1]["operators"]

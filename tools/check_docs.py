@@ -42,6 +42,17 @@ def doc_files() -> list[str]:
 # third-party tools docs legitimately invoke with `python -m`
 EXTERNAL_MODULES = {"pytest", "pip"}
 
+# user-facing CLIs that MUST be documented: each of these entry points has
+# to be referenced (as `python -m <mod>`) somewhere in the checked files,
+# so shipping a CLI without docs fails the same gate as stale docs
+REQUIRED_ENTRY_POINTS = {
+    "repro.core.analysis",
+    "repro.core.deploy",
+    "repro.launch.serve",
+    "benchmarks.perf_ab",
+    "benchmarks.report",
+}
+
 
 def module_exists(mod: str) -> bool:
     if mod.split(".", 1)[0] in EXTERNAL_MODULES:
@@ -55,8 +66,10 @@ def module_exists(mod: str) -> bool:
     return False
 
 
-def check_file(path: str) -> list[str]:
+def check_file(path: str, seen_modules: set[str] | None = None) -> list[str]:
     errors = []
+    if seen_modules is None:
+        seen_modules = set()
     text = open(path).read()
     rel = os.path.relpath(path, ROOT)
     for target in LINK_RE.findall(text):
@@ -67,6 +80,7 @@ def check_file(path: str) -> list[str]:
         if not os.path.exists(resolved):
             errors.append(f"{rel}: broken link -> {target}")
     for mod in MODULE_RE.findall(text):
+        seen_modules.add(mod)
         if not module_exists(mod):
             errors.append(f"{rel}: missing module entry point -> "
                           f"python -m {mod}")
@@ -79,8 +93,12 @@ def check_file(path: str) -> list[str]:
 def main() -> int:
     files = doc_files()
     errors = []
+    seen_modules: set[str] = set()
     for f in files:
-        errors.extend(check_file(f))
+        errors.extend(check_file(f, seen_modules))
+    for mod in sorted(REQUIRED_ENTRY_POINTS - seen_modules):
+        errors.append(f"required CLI undocumented -> python -m {mod} "
+                      f"appears in none of the checked files")
     print(f"checked {len(files)} markdown files")
     for e in errors:
         print(f"  BROKEN  {e}")
