@@ -1,7 +1,7 @@
 """§Perf A/B measurements.
 
-Eight suites (select with ``--suite {cells,evaluator,operators,kernels,
-islands,serving,tensor_evo,analysis,all}``):
+Nine suites (select with ``--suite {cells,evaluator,operators,kernels,
+islands,serving,tensor_evo,analysis,surrogate,all}``):
 
 * ``cells`` (default) — for each hillclimbed model cell, measures (under the
   FINAL roofline analyzer, so numbers are comparable) the paper-faithful
@@ -60,6 +60,17 @@ islands,serving,tensor_evo,analysis,all}``):
   reports the skip rate, screen-verdict histogram, and the per-operator
   invalid/noop/equivalent table, writing experiments/perf/analysis_ab.json
   (results quoted in EXPERIMENTS.md).
+
+* ``surrogate`` — A/Bs the surrogate pre-rank (``core.surrogate``) on the
+  joint three-kernel schedule search: the same seeded ``GevoML`` run
+  unguided vs guided by the cache-trained cost model, at an equal genome
+  budget.  The guided arm generates offspring at the normal rate but only
+  the model's predicted-Pareto slice reaches the evaluator.  Asserts the
+  guided front's hypervolume is >= 1.0x the unguided front's while the
+  guided arm executes <= 70% of the unguided arm's evaluations; reports
+  both fronts, the executed-evaluation counts, and the per-operator
+  ranked/kept table, writing experiments/perf/surrogate_ab.json (results
+  quoted in EXPERIMENTS.md).
 
   PYTHONPATH=src python -m benchmarks.perf_ab
   PYTHONPATH=src python -m benchmarks.perf_ab --suite evaluator --workers 2
@@ -817,6 +828,72 @@ def analysis_ab(generations: int = 12, seed: int = 0) -> dict:
     return out
 
 
+def surrogate_ab(generations: int = 10, seed: int = 5,
+                 keep: float = 0.5) -> dict:
+    """Surrogate-guided vs unguided ``GevoML`` on the joint three-kernel
+    schedule search — same seed, same genome budget.  The guided arm
+    generates offspring at the normal rate, featurizes each cache-missing
+    candidate (schedule one-hots + roofline/VMEM counters), and lets the
+    ridge cost model trained from the run's own FitnessCache pick the
+    predicted-Pareto slice that actually reaches the evaluator.  The bar
+    (see ISSUE/EXPERIMENTS.md): guided hypervolume >= 1.0x unguided while
+    executing <= 70% of the unguided arm's evaluations."""
+    from repro.core.evaluator import SerialEvaluator
+    from repro.core.nsga2 import hypervolume_2d
+    from repro.core.search import GevoML
+    from repro.kernels.workloads import build_joint_kernel_workload
+
+    w = build_joint_kernel_workload()
+    to, eo = w.evaluate(w.program)
+    ref = (to * 1.05, eo + 0.05)
+    kw = dict(pop_size=10, n_elite=5, init_mutations=2, mutation_rate=0.9,
+              operators={"attr_tweak": 1.0})
+
+    def arm(tag, *, surrogate):
+        ev = SerialEvaluator(w)
+        s = GevoML(w, seed=seed, evaluator=ev, surrogate=surrogate,
+                   surrogate_keep=keep, **kw)
+        t0 = time.perf_counter()
+        res = s.run(generations=generations)
+        wall = time.perf_counter() - t0
+        rec = {"wall_s": round(wall, 4),
+               "executed_evals": ev.stats()["n_evals"],
+               "hypervolume": hypervolume_2d(
+                   [i.fitness for i in res.pareto], ref),
+               "pareto": sorted(list(i.fitness) for i in res.pareto)}
+        if surrogate:
+            rec["surrogate"] = s.guide.stats()
+            rec["per_operator"] = res.operator_stats()
+        ev.close()
+        print(f"[surrogate_ab] {tag}: {rec['executed_evals']} executed "
+              f"evals, hypervolume {rec['hypervolume']:.3e}")
+        return rec
+
+    base = arm("unguided", surrogate=False)
+    guided = arm("guided", surrogate=True)
+    hv_ratio = guided["hypervolume"] / max(base["hypervolume"], 1e-30)
+    exec_frac = guided["executed_evals"] / max(base["executed_evals"], 1)
+    out = {"generations": generations, "seed": seed, "keep": keep,
+           "ref_point": list(ref),
+           "unguided": base, "guided": guided,
+           "hv_ratio_guided_vs_unguided": round(hv_ratio, 4),
+           "executed_frac_guided_vs_unguided": round(exec_frac, 4)}
+    # the acceptance bar: no Pareto-quality regression at a real
+    # execution saving
+    assert hv_ratio >= 1.0, \
+        (f"guided hypervolume fell to {hv_ratio:.3f}x unguided "
+         f"(bar: >= 1.0x)")
+    assert exec_frac <= 0.70, \
+        (f"guided arm executed {exec_frac:.0%} of the unguided arm's "
+         f"evaluations (bar: <= 70%)")
+    os.makedirs(OUT, exist_ok=True)
+    path = os.path.join(OUT, "surrogate_ab.json")
+    json.dump(out, open(path, "w"), indent=1)
+    print(f"[surrogate_ab] wrote {path}; hypervolume guided/unguided="
+          f"{hv_ratio:.2f}x at {exec_frac:.0%} of the executions")
+    return out
+
+
 def run_cells():
     os.makedirs(OUT, exist_ok=True)
 
@@ -870,7 +947,7 @@ def main():
     ap.add_argument("--suite",
                     choices=("cells", "evaluator", "operators", "kernels",
                              "islands", "serving", "tensor_evo", "analysis",
-                             "all"),
+                             "surrogate", "all"),
                     default="cells")
     ap.add_argument("--workers", type=int, default=2,
                     help="ParallelEvaluator workers for --suite evaluator")
@@ -892,6 +969,8 @@ def main():
         tensor_evo_ab()
     if args.suite in ("analysis", "all"):
         analysis_ab(generations=max(args.generations, 12))
+    if args.suite in ("surrogate", "all"):
+        surrogate_ab(generations=max(args.generations, 10))
 
 
 if __name__ == "__main__":

@@ -167,7 +167,17 @@ def suite_headlines(d: str = PERF_DIR) -> None:
               f"vs unscreened at equal genome budget; "
               f"{an['skip_rate_overall']:.0%} of cache-missing mutants "
               f"resolved without execution ({per}) |")
-    if not any((ev, op, kn, isl, sv, tv, an)):
+    sur = load("surrogate_ab.json")
+    if sur:
+        st = sur["guided"]["surrogate"]
+        print(f"| surrogate | surrogate-guided search = "
+              f"{sur['hv_ratio_guided_vs_unguided']}x hypervolume vs "
+              f"unguided at "
+              f"{sur['executed_frac_guided_vs_unguided']:.0%} of the "
+              f"executed evaluations, equal genome budget (kept "
+              f"{st['kept']}/{st['ranked']} ranked offspring over "
+              f"{st['refits']} refits) |")
+    if not any((ev, op, kn, isl, sv, tv, an, sur)):
         print(f"| (none) | no *_ab.json suite records under {d} |")
 
 
@@ -193,6 +203,25 @@ def analysis_screen_table(d: str = PERF_DIR) -> None:
           "screen counts can exceed its own proposal count.")
 
 
+def surrogate_rank_table(d: str = PERF_DIR) -> None:
+    """§Surrogate pre-rank: per-operator ranked/kept survival counts from
+    the guided ``surrogate_ab`` arm."""
+    p = os.path.join(d, "surrogate_ab.json")
+    if not os.path.exists(p):
+        return
+    sur = json.load(open(p))
+    print("\n| operator | proposed | ranked | kept | survival |")
+    print("|---|---|---|---|---|")
+    for op_name, row in sorted(sur["guided"]["per_operator"].items()):
+        ranked, kept = row.get("ranked", 0), row.get("kept", 0)
+        rate = f"{kept / ranked:.0%}" if ranked else ""
+        print(f"| {op_name} | {row['proposed']} | {ranked} | {kept} | "
+              f"{rate} |")
+    print("\nRanked/kept counts are per *edit*, like the screen-verdict "
+          "counters, and only cover offspring the model actually ranked — "
+          "cache hits and un-featurizable patches bypass the pre-rank.")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--mesh", default="single", choices=["single", "multi"])
@@ -207,6 +236,7 @@ def main():
         perf_cell_table(args.dir or PERF_DIR)
         suite_headlines(args.dir or PERF_DIR)
         analysis_screen_table(args.dir or PERF_DIR)
+        surrogate_rank_table(args.dir or PERF_DIR)
     else:
         dryrun_report(args.mesh, args.dir)
 

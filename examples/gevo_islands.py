@@ -30,6 +30,9 @@ Flags:
     --root DIR          state directory (manifest + island checkpoints +
                         shared cache); enables --resume.  Default: temp dir
     --resume            continue a killed run from --root (bit-exact)
+    --surrogate         cache-trained cost model pre-ranks offspring on
+                        every island (the shared cache trains all models)
+    --surrogate-keep F  fraction of generated offspring that is executed
 """
 
 import argparse
@@ -92,10 +95,21 @@ def main():
                          "front doc (ParetoFront.load / the deploy CLI)")
     ap.add_argument("--resume", action="store_true",
                     help="continue a killed run from --root")
+    ap.add_argument("--surrogate", action="store_true",
+                    help="surrogate pre-rank on every island: a cost model "
+                         "trained from the shared fitness cache keeps only "
+                         "the predicted-Pareto slice of each generation's "
+                         "offspring")
+    ap.add_argument("--surrogate-keep", type=float, default=0.5,
+                    help="fraction of generated offspring the surrogate "
+                         "lets through (default 0.5)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
     if args.resume and not args.root:
         ap.error("--resume requires --root")
+    if args.surrogate and args.engine == "tensor":
+        ap.error("--surrogate drives the python island engine; for the "
+                 "tensor engine use TensorGevoML(surrogate=True) directly")
     if args.engine == "tensor" and args.workload not in KERNELS:
         ap.error("--engine tensor needs a kernel-schedule workload "
                  f"({', '.join(KERNELS)})")
@@ -137,7 +151,8 @@ def main():
         migrate_every=args.migrate_every, n_migrants=args.migrants,
         topology=args.topology, processes=processes,
         eval_workers=eval_workers, verbose=True,
-        backend="mesh" if args.engine == "tensor" else "processes")
+        backend="mesh" if args.engine == "tensor" else "processes",
+        surrogate=args.surrogate, surrogate_keep=args.surrogate_keep)
     res = orch.run(generations=args.generations, resume=args.resume)
 
     print("\nMerged Pareto front (argmin(time, error)):")

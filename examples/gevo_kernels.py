@@ -17,6 +17,9 @@ Flags:
     --minimize          ddmin the best-by-time patch to its key tweaks
     --artifacts DIR     export the winner to an ArtifactRegistry (serving
                         paths pick it up via resolve_kernel_schedule)
+    --surrogate         cache-trained cost model pre-ranks offspring; only
+                        the predicted-Pareto slice is executed
+    --surrogate-keep F  fraction of generated offspring that slice keeps
     --parallel N / --cache PATH / --generations G   as in quickstart.py
 """
 
@@ -49,6 +52,13 @@ def main():
                     help="export the winning schedule to this "
                          "ArtifactRegistry directory (resolved by serving "
                          "paths via resolve_kernel_schedule)")
+    ap.add_argument("--surrogate", action="store_true",
+                    help="surrogate pre-rank: a cache-trained cost model "
+                         "keeps only the predicted-Pareto slice of each "
+                         "generation's offspring for execution")
+    ap.add_argument("--surrogate-keep", type=float, default=0.5,
+                    help="fraction of generated offspring the surrogate "
+                         "lets through (default 0.5)")
     args = ap.parse_args()
 
     print(f"Building {args.kernel} schedule workload "
@@ -63,10 +73,12 @@ def main():
     print(f"Evolving schedules (NSGA-II, pop={args.pop}, "
           f"{args.generations} generations, operator=attr_tweak)...")
     evaluator = make_evaluator(w, parallel=args.parallel,
-                               cache_path=args.cache)
+                               cache_path=args.cache,
+                               features=args.surrogate)
     search, res, best, within_tol = evolve_kernel_schedule(
         w, generations=args.generations, pop_size=args.pop, seed=0,
-        evaluator=evaluator, verbose=True)
+        evaluator=evaluator, verbose=True, surrogate=args.surrogate,
+        surrogate_keep=args.surrogate_keep)
 
     # compare against the baseline sample the search itself used (in
     # measured mode the preamble's t0 is an independent measurement)
@@ -83,6 +95,10 @@ def main():
           f"{(1 - best.fitness[0] / t0) * 100:.1f}%{gate} "
           f"({search.n_evals} evaluations, "
           f"cache hit rate {search.cache.hit_rate:.0%})")
+    if args.surrogate:
+        st = search.guide.stats()
+        print(f"surrogate pre-rank: kept {st['kept']}/{st['ranked']} "
+              f"ranked offspring across {st['refits']} refits")
     if args.minimize:
         small, fit = minimize_patch(best.patch, search.evaluator,
                                     expect_fitness=best.fitness)

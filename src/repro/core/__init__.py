@@ -2,11 +2,12 @@
 registry + Patch algebra), schedule genomes (kernel-schedule search),
 NSGA-II, the generational search loop, the evaluation engine (persistent
 fitness cache + serial/parallel evaluators), the island-model orchestrator
-(multi-population search with migration over a shared cache), and the
+(multi-population search with migration over a shared cache), the
 deployment layer (Pareto-front queries, the artifact registry, and the
-continuous-batching serving engine).  See docs/ARCHITECTURE.md for the
-module map, DESIGN.md for representation details, and docs/USER_GUIDE.md
-for the end-to-end walkthrough."""
+continuous-batching serving engine), and the surrogate layer (cache-trained
+cost models that pre-rank candidates before execution).  See
+docs/ARCHITECTURE.md for the module map, DESIGN.md for representation
+details, and docs/USER_GUIDE.md for the end-to-end walkthrough."""
 
 from .deploy import (Artifact, ArtifactRegistry, FrontMember, ParetoFront,
                      ServeEngine, ServeRequest, ServeResult)
@@ -21,6 +22,7 @@ from .islands import (IslandOrchestrator, IslandResult, IslandSpec,
 from .islands import plan as plan_islands
 from .schedule import ScheduleError, ScheduleSpace
 from .search import GevoML, Individual, SearchResult, describe_patch
+from .surrogate import SurrogateGuide, SurrogateModel, make_featurizer
 from .tensor_evo import (GenomeEncoding, TensorEvaluator, TensorGevoML,
                          TensorIslandFleet, TensorNSGA2,
                          make_tensor_evaluator)
@@ -39,4 +41,5 @@ __all__ = [
     "ServeEngine", "ServeRequest", "ServeResult",
     "GenomeEncoding", "TensorNSGA2", "TensorEvaluator",
     "make_tensor_evaluator", "TensorGevoML", "TensorIslandFleet",
+    "SurrogateGuide", "SurrogateModel", "make_featurizer",
 ]

@@ -243,12 +243,14 @@ def main() -> None:
                          "shared cache); default: fresh temp dir")
     ap.add_argument("--out", default=None)
     args = ap.parse_args()
-    t0 = time.time()
+    # monotonic clock, like fitness.measured_time — time.time() jumps with
+    # wall-clock adjustments and can even go backwards mid-run
+    t0 = time.perf_counter()
     s = GevoShard(args.arch, args.shape, multi_pod=args.multi_pod,
                   pop_size=args.pop, seed=args.seed, cache_path=args.cache,
                   islands=args.islands, islands_dir=args.islands_dir)
     res = s.run(args.generations)
-    res["wall_s"] = round(time.time() - t0, 1)
+    res["wall_s"] = round(time.perf_counter() - t0, 4)
     res["records"] = s.records
     print(json.dumps({k: v for k, v in res.items() if k != "records"},
                      indent=1, default=str))

@@ -17,6 +17,10 @@ search loop increments them and snapshots them into each
   candidates the static patch screen (:mod:`repro.core.analysis`) resolved
   without execution, by verdict — the paper's per-operator attribution of
   where wasted evaluations come from.  All zero when screening is off.
+* ``ranked`` / ``kept`` — edits of this kind contained in candidates the
+  surrogate pre-rank stage (:mod:`repro.core.surrogate`) scored, and in the
+  predicted-Pareto slice it let through (``kept / ranked`` is the operator's
+  surrogate-survival rate).  All zero when the surrogate is off.
 """
 
 from __future__ import annotations
@@ -26,8 +30,9 @@ from typing import Iterable
 from .base import registered_ops
 
 _FIELDS = ("proposed", "applied", "valid", "elite",
-           "invalid", "noop", "equivalent")
+           "invalid", "noop", "equivalent", "ranked", "kept")
 SCREEN_FIELDS = ("invalid", "noop", "equivalent")
+SURROGATE_FIELDS = ("ranked", "kept")
 
 
 class OperatorStats:
@@ -69,6 +74,14 @@ class OperatorStats:
             return   # "novel" (and anything future) executes; nothing to count
         for k in kinds:
             self._row(k)[verdict] += 1
+
+    def count_ranked(self, kinds: Iterable[str], *, kept: bool) -> None:
+        """Attribute one surrogate-ranked candidate to its edit kinds;
+        ``kept`` marks it surviving into the executed slice."""
+        for k in kinds:
+            self._row(k)["ranked"] += 1
+            if kept:
+                self._row(k)["kept"] += 1
 
     def snapshot(self) -> dict[str, dict[str, int]]:
         """Sorted deep copy, safe to embed in history rows / checkpoints."""

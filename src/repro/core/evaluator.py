@@ -55,12 +55,17 @@ class EvalOutcome:
     """Result of evaluating one patch: a fitness tuple or an invalidity
     reason.  ``cached`` marks outcomes served from the cache; ``verdict``
     names the static-screen label (``invalid``/``noop``/``equivalent``) when
-    the outcome was resolved without execution (None for executed ones)."""
+    the outcome was resolved without execution (None for executed ones).
+    ``transient`` marks failures that say nothing about the variant itself
+    (a worker crash, an OOM, a backend error): they are remembered for the
+    current run only and never written to a persistent cache, so the next
+    run re-evaluates instead of trusting a poisoned verdict."""
 
     fitness: tuple[float, float] | None
     error: str | None = None
     cached: bool = False
     verdict: str | None = None
+    transient: bool = False
 
     @property
     def ok(self) -> bool:
@@ -104,9 +109,17 @@ class FitnessCache:
 
     Caveat: the fitness layer folds *any* execution failure into
     invalidity, so a transient crash (OOM, backend error) would be
-    remembered forever; pass ``persist_invalid=False`` to keep invalid
-    outcomes in-memory only when sharing a cache across heterogeneous
-    machines (costs re-evaluating invalid variants on each fresh run)."""
+    remembered forever; outcomes flagged ``transient`` (worker-crash
+    containment in :class:`ParallelEvaluator`) are therefore kept
+    in-memory only and never appended to disk, and
+    ``persist_invalid=False`` extends the same treatment to *all* invalid
+    outcomes when sharing a cache across heterogeneous machines (costs
+    re-evaluating invalid variants on each fresh run).
+
+    Records may carry a ``features`` vector (the surrogate layer's
+    training signal — see :mod:`repro.core.surrogate`): feature-bearing
+    outcomes turn the cache into a ready-made regression dataset of
+    ``(features, fitness)`` pairs, loadable from any cache JSONL."""
 
     def __init__(self, path: str | None = None, *,
                  persist_invalid: bool = True, writer: str | None = None):
@@ -115,9 +128,11 @@ class FitnessCache:
         self.writer = writer
         self._mem: dict[str, EvalOutcome] = {}
         self._writers: dict[str, str] = {}   # key -> author tag (if tagged)
+        self._features: dict[str, list[float]] = {}  # key -> feature vector
         self.hits = 0
         self.misses = 0
-        self.cross_hits = 0   # hits on entries another writer authored
+        self.cross_hits = 0   # distinct entries another writer authored
+        self._cross_seen: set[str] = set()   # keys already counted above
         self._fd = None
         self._read_offset = 0
         if path:
@@ -152,6 +167,9 @@ class FitnessCache:
                     self._mem[key] = EvalOutcome.from_doc(rec)
                     if rec.get("writer") is not None:
                         self._writers[key] = rec["writer"]
+                    if rec.get("features") is not None:
+                        self._features[key] = [float(x)
+                                               for x in rec["features"]]
                     added += 1
         return added
 
@@ -166,20 +184,28 @@ class FitnessCache:
         if out is None:
             return None
         author = self._writers.get(key)
-        if author is not None:
+        if author is not None and key not in self._cross_seen:
             # "analysis:<writer>" records are authored by <writer>'s screen;
-            # a bare "analysis" tag (anonymous cache) names nobody.
+            # a bare "analysis" tag (anonymous cache) names nobody.  Each
+            # entry counts at most once: repeated gets of the same key
+            # (in-batch duplicates, re-queries across generations) are not
+            # additional sharing.
             base = author[len("analysis:"):] \
                 if author.startswith("analysis:") else author
             if base != "analysis" and base != self.writer:
                 self.cross_hits += 1
+                self._cross_seen.add(key)
         return replace(out, cached=True)
 
     def put(self, key: str, outcome: EvalOutcome, *,
-            writer: str | None = None) -> None:
+            writer: str | None = None,
+            features: list[float] | None = None) -> None:
         """Record an outcome.  ``writer`` overrides this cache's author tag
         for the one record (the evaluator tags statically screened verdicts
-        ``analysis:<writer>`` so cache files show what was never executed)."""
+        ``analysis:<writer>`` so cache files show what was never executed).
+        ``features`` attaches the patch's surrogate feature vector to the
+        record.  ``transient`` outcomes stay in-memory only — this run will
+        not retry them, but no future run inherits the failure."""
         if key in self._mem:
             return
         author = writer if writer is not None else self.writer
@@ -187,12 +213,27 @@ class FitnessCache:
         self._mem[key] = outcome
         if author is not None:
             self._writers[key] = author
-        if self._fd is not None and (outcome.ok or self.persist_invalid):
+        if features is not None:
+            self._features[key] = [float(x) for x in features]
+        if self._fd is not None and not outcome.transient \
+                and (outcome.ok or self.persist_invalid):
             rec = {"key": key}
             rec.update(outcome.to_doc())
             if author is not None:
                 rec["writer"] = author
+            if features is not None:
+                rec["features"] = [float(x) for x in features]
             self._append_line(json.dumps(rec) + "\n")
+
+    def features_of(self, key: str) -> list[float] | None:
+        return self._features.get(key)
+
+    def training_rows(self) -> list[tuple[str, list[float], EvalOutcome]]:
+        """Every feature-bearing record as a ``(key, features, outcome)``
+        triple — the surrogate layer's training set (invalid outcomes
+        included; the trainer decides what to regress on)."""
+        return [(k, list(f), self._mem[k])
+                for k, f in self._features.items() if k in self._mem]
 
     def _append_line(self, line: str) -> None:
         """Crash- and concurrency-safe append: one whole line per syscall on
@@ -305,6 +346,14 @@ def _worker_eval(patch: Patch):
         return ("ok", _WORKER_WORKLOAD.evaluate(program))
     except (EditError, InvalidVariant) as e:
         return ("invalid", str(e))
+    except Exception:
+        # Anything else (XLA backend error, OOM, pickling trouble) says
+        # nothing about the variant — containing it here keeps one bad
+        # dispatch from propagating through pool.map and killing the whole
+        # search.  The parent marks these outcomes transient, so they are
+        # never persisted and a future run re-evaluates.
+        import traceback
+        return ("error", traceback.format_exc())
 
 
 # --------------------------------------------------------------------------
@@ -332,6 +381,7 @@ class Evaluator:
         self.cache = cache if cache is not None else FitnessCache()
         self.fingerprint = workload_fingerprint(workload)
         self.screen = None  # optional static patch screen (core.analysis)
+        self.featurizer = None  # optional patch featurizer (core.surrogate)
         self.n_evals = 0    # actual executions (cache misses evaluated)
         self.n_invalid = 0  # executions that came back invalid
         self.n_screened = 0  # misses resolved statically, no execution
@@ -362,21 +412,33 @@ class Evaluator:
             screened, executed = self._triage(
                 {k: patches[ixs[0]] for k, ixs in fresh.items()})
             for k, ixs in fresh.items():
+                feats = self._features_of(patches[ixs[0]])
                 if k in screened:
                     out = screened[k]
                     self.n_screened += 1
                     self.screened_by[out.verdict] = \
                         self.screened_by.get(out.verdict, 0) + 1
-                    self.cache.put(k, out, writer=self._screen_writer())
+                    self.cache.put(k, out, writer=self._screen_writer(),
+                                   features=feats)
                 else:
                     out = executed[k]
-                    self.cache.put(k, out)
+                    self.cache.put(k, out, features=feats)
                     self.n_evals += 1
                     if not out.ok:
                         self.n_invalid += 1
                 for i in ixs:
                     outcomes[i] = out
         return outcomes  # type: ignore[return-value]
+
+    def _features_of(self, patch) -> list[float] | None:
+        """The patch's surrogate feature vector, or None (no featurizer
+        attached, or the patch does not featurize — e.g. fails to apply)."""
+        if self.featurizer is None:
+            return None
+        try:
+            return self.featurizer(patch)
+        except Exception:
+            return None
 
     def _triage(self, fresh: dict[str, Patch]
                 ) -> tuple[dict[str, EvalOutcome], dict[str, EvalOutcome]]:
@@ -431,10 +493,16 @@ class Evaluator:
         return out
 
     def stats(self) -> dict:
+        # ``misses`` (cache-level) counts every unique key that missed the
+        # cache, whether it then executed or was resolved statically; the
+        # split below is what execution-cost reporting should quote —
+        # ``executed_misses`` dispatched, ``screened`` never ran.
         s = self.cache.stats()
         s.update({"n_evals": self.n_evals, "n_invalid": self.n_invalid,
                   "n_screened": self.n_screened,
-                  "screened_by": dict(self.screened_by)})
+                  "screened_by": dict(self.screened_by),
+                  "executed_misses": self.n_evals,
+                  "screened": self.n_screened})
         return s
 
     def close(self) -> None:
@@ -522,8 +590,16 @@ class ParallelEvaluator(Evaluator):
         chunk = self.chunk_size or max(
             1, (len(patches) + self.n_workers - 1) // self.n_workers)
         raw = pool.map(_worker_eval, patches, chunksize=chunk)
-        return [EvalOutcome(fitness=r[1]) if r[0] == "ok"
-                else EvalOutcome(fitness=None, error=r[1]) for r in raw]
+        out = []
+        for tag, payload in raw:
+            if tag == "ok":
+                out.append(EvalOutcome(fitness=payload))
+            elif tag == "invalid":
+                out.append(EvalOutcome(fitness=None, error=payload))
+            else:  # contained worker crash: invalid for this run only
+                out.append(EvalOutcome(fitness=None, error=payload,
+                                       transient=True))
+        return out
 
     def close(self) -> None:
         if self._pool is not None:
@@ -536,11 +612,15 @@ class ParallelEvaluator(Evaluator):
 def make_evaluator(workload, *, parallel: int = 0,
                    cache_path: str | None = None,
                    inline_static: bool = False,
-                   screen: bool = False) -> Evaluator:
+                   screen: bool = False,
+                   features: bool = False) -> Evaluator:
     """Convenience constructor used by the CLI surfaces (examples,
     benchmarks): ``parallel`` <= 1 gives a SerialEvaluator.  ``screen=True``
     attaches the static patch screen (``core.analysis``) so invalid / noop /
-    equivalent mutants resolve without execution."""
+    equivalent mutants resolve without execution.  ``features=True``
+    attaches the surrogate featurizer (``core.surrogate``) so every fresh
+    outcome lands in the cache with its feature vector — the cache then
+    doubles as surrogate training data."""
     cache = FitnessCache(cache_path)
     if parallel and parallel > 1:
         ev: Evaluator = ParallelEvaluator(
@@ -551,4 +631,7 @@ def make_evaluator(workload, *, parallel: int = 0,
     if screen:
         from .analysis import make_screen   # local: analysis imports us
         ev.screen = make_screen(workload)
+    if features:
+        from .surrogate import make_featurizer   # local: surrogate imports us
+        ev.featurizer = make_featurizer(workload)
     return ev

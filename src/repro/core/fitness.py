@@ -141,6 +141,12 @@ class KernelWorkload:
     # screen (core.analysis) can reject un-launchable genomes without
     # executing anything.  Optional and advisory — also not fingerprinted.
     static_probe: Callable[[dict], float] | None = None
+    # surrogate feature probe: genome -> flat {name: float} of roofline/VMEM
+    # counters (``kernels.costs.schedule_features``), consumed by
+    # core.surrogate's featurizers.  Optional and advisory — also not
+    # fingerprinted (it changes what the surrogate sees, not what a variant
+    # measures).
+    feature_probe: Callable[[dict], dict] | None = None
 
     def evaluate(self, program: Program) -> tuple[float, float]:
         try:

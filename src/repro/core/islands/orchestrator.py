@@ -122,7 +122,8 @@ class IslandOrchestrator:
                  n_elite: int | None = None, max_tries: int = 40,
                  processes: bool = False, eval_workers: int = 0,
                  cache_path: str | None = None, verbose: bool = False,
-                 backend: str = "processes", screen: bool = False):
+                 backend: str = "processes", screen: bool = False,
+                 surrogate: bool = False, surrogate_keep: float = 0.5):
         if backend not in self.BACKENDS:
             raise ValueError(f"unknown backend {backend!r}; "
                              f"choose from {self.BACKENDS}")
@@ -149,6 +150,10 @@ class IslandOrchestrator:
         self.processes = processes
         self.eval_workers = eval_workers
         self.screen = screen   # static patch screen on every island
+        # surrogate pre-rank on every island; with the shared persistent
+        # cache, each island's model trains on ALL islands' measurements
+        self.surrogate = surrogate
+        self.surrogate_keep = surrogate_keep
         self.cache_path = cache_path or os.path.join(root_dir, "cache.jsonl")
         self.verbose = verbose
         self.fingerprint = workload_fingerprint(workload)
@@ -245,7 +250,9 @@ class IslandOrchestrator:
                 eval_workers=self.eval_workers,
                 verbose=False,
                 inline=not self.processes,
-                screen=self.screen)
+                screen=self.screen,
+                surrogate=self.surrogate,
+                surrogate_keep=self.surrogate_keep)
             if on_generation is not None:
                 if self.processes:
                     raise ValueError("on_generation requires in-process "
@@ -308,6 +315,12 @@ class IslandOrchestrator:
             if on_generation is not None:
                 raise ValueError("on_generation requires the process "
                                  "backend (backend='processes')")
+            if self.surrogate:
+                raise ValueError(
+                    "surrogate pre-rank drives the process backend; the "
+                    "mesh fleet steps all islands in one jit call (use "
+                    "TensorGevoML(surrogate=True) for a guided tensor "
+                    "search)")
             from ..tensor_evo.islands import TensorIslandFleet
             with TensorIslandFleet(
                     self.w, root_dir=self.root_dir, specs=self.specs,

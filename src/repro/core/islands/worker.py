@@ -31,7 +31,8 @@ def island_payload(workload, spec: IslandSpec, *, checkpoint_dir: str,
                    migrants: list[dict] | None, pop_size: int,
                    n_elite: int, max_tries: int, eval_workers: int = 0,
                    verbose: bool = False, inline: bool = True,
-                   screen: bool = False) -> dict:
+                   screen: bool = False, surrogate: bool = False,
+                   surrogate_keep: float = 0.5) -> dict:
     """Build the (picklable, unless ``inline``) argument doc for
     :func:`run_island_epoch`.  ``inline=True`` keeps the live workload
     object for in-process execution; ``inline=False`` converts it to
@@ -49,6 +50,8 @@ def island_payload(workload, spec: IslandSpec, *, checkpoint_dir: str,
         "eval_workers": eval_workers,
         "verbose": verbose,
         "screen": screen,
+        "surrogate": surrogate,
+        "surrogate_keep": surrogate_keep,
     }
     if inline:
         payload["workload"] = workload
@@ -118,7 +121,9 @@ def run_island_epoch(payload: dict) -> dict:
             operators=spec.operators,
             evaluator=evaluator,
             checkpoint_dir=payload["checkpoint_dir"],
-            screen=payload.get("screen", False))
+            screen=payload.get("screen", False),
+            surrogate=payload.get("surrogate", False),
+            surrogate_keep=payload.get("surrogate_keep", 0.5))
         search.run(
             generations=payload["generations"],
             resume=payload["resume"],

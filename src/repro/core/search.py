@@ -124,6 +124,15 @@ class GevoML:
     for a persistent fitness store) to scale evaluation.  ``checkpoint_dir``
     enables per-generation snapshots and ``run(resume=True)``.
 
+    ``surrogate=True`` adds the cache-trained pre-rank stage
+    (:mod:`repro.core.surrogate`): offspring are generated at the normal
+    rate but only the predicted-Pareto slice — ``surrogate_keep`` of the
+    fill, at least 1 — is executed each generation, after the cache lookup
+    and the static screen have resolved what they can exactly.  Guided runs
+    trade bit-exact replay for executed-evaluation savings: resuming one
+    reproduces counters, not RNG-identical populations, unless the cache is
+    persistent.
+
     ``engine`` selects the evaluation/selection machinery: ``"python"`` is
     the per-genome path above; ``"tensor"`` swaps in the batched evaluator
     (:func:`~repro.core.tensor_evo.make_tensor_evaluator` — one vectorized
@@ -147,7 +156,8 @@ class GevoML:
                  evaluator: Evaluator | None = None,
                  cache_path: str | None = None,
                  checkpoint_dir: str | None = None,
-                 engine: str = "python", screen: bool = False):
+                 engine: str = "python", screen: bool = False,
+                 surrogate: bool = False, surrogate_keep: float = 0.5):
         if engine not in self.ENGINES:
             raise ValueError(f"unknown engine {engine!r}; "
                              f"choose from {self.ENGINES}")
@@ -180,6 +190,19 @@ class GevoML:
             # skip evaluation; fitness outcomes are unchanged bit-for-bit)
             from .analysis import make_screen
             self.evaluator.screen = make_screen(workload)
+        self.guide = None
+        if surrogate:
+            # surrogate pre-rank: offspring are over-generated, the cache-
+            # trained cost model keeps the predicted-Pareto slice, and only
+            # that slice is executed.  Runs AFTER the cache lookup and the
+            # static screen — the model prioritizes among unknowns, it never
+            # overrides an exact verdict.
+            from .surrogate import SurrogateGuide
+            self.guide = SurrogateGuide(workload, keep=surrogate_keep)
+            if getattr(self.evaluator, "featurizer", None) is None:
+                # record features on every measured outcome so the cache
+                # this search writes is itself surrogate training data
+                self.evaluator.featurizer = self.guide.featurizer
         if engine == "tensor":
             from .tensor_evo import nsga2 as _tnsga
             self._rank_select = _tnsga.rank_select
@@ -299,6 +322,76 @@ class GevoML:
                                f"in {self.max_tries} rounds")
         return filled
 
+    # -- surrogate pre-rank: over-generate, keep the predicted slice --------
+    def _prerank(self, batch: list[Patch], room: int
+                 ) -> tuple[list[Patch], int]:
+        """The slice of a candidate batch that reaches the evaluator, plus
+        how many of them are novel (cache-missing) executions.  Cached
+        patches always pass (re-looking them up costs nothing); novel ones
+        are ranked by the trained model and cut to ``room``.  Candidates the
+        featurizer cannot see pass through unranked — the surrogate only
+        prioritizes what it can predict."""
+        cached, novel = [], []
+        for p in batch:
+            (cached if self.evaluator.key(p) in self.cache
+             else novel).append(p)
+        if not self.guide.model.trained or len(novel) <= room:
+            return cached + novel, len(novel)
+        feats, rankable, passthrough = [], [], []
+        for p in novel:
+            try:
+                feats.append(self.guide.featurizer(p))
+                rankable.append(p)
+            except Exception:
+                passthrough.append(p)
+        kept_ix = self.guide.select(feats, max(0, room - len(passthrough)))
+        keep = []
+        for i, p in enumerate(rankable):
+            self.stats.count_ranked(p.kinds(), kept=i in kept_ix)
+            if i in kept_ix:
+                keep.append(p)
+        return cached + passthrough + keep, len(passthrough) + len(keep)
+
+    def _fill_guided(self, n: int, candidate_fn, what: str
+                     ) -> list[Individual]:
+        """The surrogate-guided fill: generate candidates at the unguided
+        rate, but spend at most ``keep_of(n)`` novel executions on them.
+        May return fewer than ``n`` individuals — that is the point (the
+        budget, not the population slot count, is the binding constraint);
+        at least one is guaranteed (falling back to an unguided fill when
+        the model starved the generation entirely)."""
+        guide = self.guide
+        guide.refit(self.cache)
+        budget = guide.keep_of(n)
+        spent = 0
+        filled: list[Individual] = []
+        counted: dict[int, EvalOutcome] = {}  # freshly screened, by identity
+        for _ in range(self.max_tries):
+            if len(filled) >= n or (spent >= budget and filled):
+                break
+            batch: list[Patch] = []
+            for _ in range(n - len(filled)):
+                c = candidate_fn()
+                if c is not None:
+                    batch.append(c)
+            if not batch:
+                continue
+            keep, n_novel = self._prerank(batch, budget - spent)
+            spent += n_novel
+            for patch, out in zip(keep, self.evaluator.evaluate_batch(keep)):
+                if (out.verdict is not None and not out.cached
+                        and id(out) not in counted):
+                    counted[id(out)] = out
+                    self.stats.count_screened(patch.kinds(), out.verdict)
+                if out.ok:
+                    filled.append(Individual(patch, out.fitness))
+                    self.stats.count_valid(patch.kinds())
+                else:
+                    self._n_invalid_outcomes += 1
+        if not filled:
+            return self._fill(1, candidate_fn, what)
+        return filled[:n]
+
     # -- checkpoint/resume --------------------------------------------------
     def _checkpoint_path(self, name: str) -> str:
         return os.path.join(self.checkpoint_dir, name)
@@ -318,6 +411,8 @@ class GevoML:
             "counters": {"n_invalid": self._n_invalid_outcomes,
                          "evaluator": self.evaluator.stats()},
         }
+        if self.guide is not None:
+            doc["counters"]["surrogate"] = self.guide.stats()
         atomic_write_json(self._checkpoint_path(f"gen_{gen:04d}.json"), doc)
         atomic_write_json(self._checkpoint_path("latest.json"), doc)
 
@@ -395,6 +490,8 @@ class GevoML:
             self.evaluator.cache.hits = ev_stats["hits"]
             self.evaluator.cache.misses = ev_stats["misses"]
             self.evaluator.cache.cross_hits = ev_stats.get("cross_hits", 0)
+            if self.guide is not None:
+                self.guide.restore(state["counters"].get("surrogate"))
             start_gen = state["gen"] + 1
             t0 = _time.perf_counter() - (history[-1]["wall_s"]
                                          if history else 0.0)
@@ -419,7 +516,8 @@ class GevoML:
             elites = [pop[i] for i in elite_idx]
             for ind in elites:
                 self.stats.count_elite(ind.patch.kinds())
-            offspring = self._fill(
+            fill = self._fill if self.guide is None else self._fill_guided
+            offspring = fill(
                 self.pop_size - len(elites),
                 lambda: self._offspring_candidate(pop, rank, crowd),
                 "offspring")
@@ -439,6 +537,10 @@ class GevoML:
                 "operators": self.stats.snapshot(),
                 "wall_s": _time.perf_counter() - t0,
             })
+            if self.guide is not None:
+                # only present on guided runs, so unguided history rows
+                # (and their golden tests) are unchanged
+                history[-1]["surrogate"] = self.guide.stats()
             if self.verbose:
                 h = history[-1]
                 print(f"[gen {gen:3d}] time={h['best_time']:.3e} "

@@ -15,7 +15,12 @@ Contract differences from the Python engine (documented in DESIGN.md):
 * crossover is uniform over knobs (the natural fixed-shape operator), not
   messy edit-list splicing;
 * the RNG is ``jax.random`` (counter-based), not NumPy's generator — runs
-  are deterministic per seed but not RNG-compatible with ``GevoML``.
+  are deterministic per seed but not RNG-compatible with ``GevoML``;
+* ``surrogate=True`` swaps in an over-generating step (``ceil(1/keep)`` x
+  the offspring lanes) whose children are cut back to ``P - E`` by the
+  host-side cost model (:mod:`repro.core.surrogate`) before re-entering the
+  device loop — the default step is untouched and stays bit-exact with the
+  pre-surrogate engine.
 
 Everything *reported* — final population fitness, Pareto front, cache
 records — is recomputed through the bit-exact NumPy path
@@ -61,7 +66,8 @@ class TensorGevoML:
                  seed: int = 0, verbose: bool = False,
                  cache: FitnessCache | None = None,
                  cache_path: str | None = None,
-                 checkpoint_dir: str | None = None):
+                 checkpoint_dir: str | None = None,
+                 surrogate: bool = False, surrogate_keep: float = 0.5):
         if cache is not None and cache_path is not None:
             raise ValueError("pass cache OR cache_path, not both")
         if cache is None:
@@ -79,6 +85,19 @@ class TensorGevoML:
         self.encoding = self.evaluator.encoding
         self.batched = self.evaluator.batched
         self._step = None
+        self._over_step = None
+        # surrogate pre-rank: the over-generating step produces
+        # ceil(1/keep) x the offspring lanes; the cost model (trained each
+        # generation on the current population's objectives) keeps the
+        # predicted-Pareto slice, so the evaluated population stays
+        # ``pop_size`` while candidate generation widens.  Off by default —
+        # the default step is bit-exact with the pre-surrogate engine.
+        self.guide = None
+        if surrogate:
+            import math
+            from ..surrogate import SurrogateGuide
+            self.guide = SurrogateGuide(workload, keep=surrogate_keep)
+            self._overgen = math.ceil(1.0 / surrogate_keep)
 
     @property
     def cache(self) -> FitnessCache:
@@ -95,11 +114,14 @@ class TensorGevoML:
         return False
 
     # -- the jitted generation step ------------------------------------------
-    def step_fn(self):
-        """Build (once) the jitted step.  Call under ``enable_x64`` — the
-        roofline arithmetic is float64."""
-        if self._step is not None:
-            return self._step
+    def _make_step(self, n_children: int, concat: bool):
+        """Build one jitted generation step producing ``n_children``
+        offspring lanes.  ``concat=True`` is the classic step (returns the
+        next ``(P, knobs)`` population); ``concat=False`` returns
+        ``(elites, children, objs, key, metrics)`` so a host-side stage can
+        pick which children survive.  RNG draw shapes depend only on
+        ``n_children``, so the ``n_children == P - E`` concat step is
+        bit-exact with the pre-surrogate engine."""
         import jax
         import jax.numpy as jnp
 
@@ -111,7 +133,7 @@ class TensorGevoML:
             raise InvalidVariant("space has no mutable knobs")
         mutable = jnp.asarray(mutable, jnp.int32)
         P, E = self.pop_size, self.n_elite
-        n_off = P - E
+        n_off = n_children
 
         def objectives(idx):
             time, valid = terms(idx)
@@ -153,17 +175,59 @@ class TensorGevoML:
             new = r + (r >= cur)
             child = child.at[lanes, kpos].set(
                 jnp.where(do_mut, new, cur).astype(idx.dtype))
-            new_idx = jnp.concatenate([elites, child], axis=0)
             metrics = {
                 "best_time": jnp.min(objs[:, 0]),
                 "best_error": jnp.min(objs[:, 1]),
                 "pareto_size": jnp.sum(rank == 0),
                 "n_valid": jnp.sum(valid),
             }
-            return new_idx, key, metrics
+            if concat:
+                return jnp.concatenate([elites, child], axis=0), key, metrics
+            return elites, child, objs, key, metrics
 
-        self._step = jax.jit(step)
+        return jax.jit(step)
+
+    def step_fn(self):
+        """Build (once) the jitted step.  Call under ``enable_x64`` — the
+        roofline arithmetic is float64."""
+        if self._step is None:
+            self._step = self._make_step(self.pop_size - self.n_elite,
+                                         concat=True)
         return self._step
+
+    def over_step_fn(self):
+        """The surrogate path's over-generating step: ``ceil(1/keep)`` x the
+        offspring lanes, returned unconcatenated for host-side pre-rank."""
+        if self._over_step is None:
+            n_off = self.pop_size - self.n_elite
+            self._over_step = self._make_step(self._overgen * n_off,
+                                              concat=False)
+        return self._over_step
+
+    # -- surrogate pre-rank (host side; numpy featurizer + ridge model) ------
+    def _row_features(self, row) -> list[float]:
+        return self.guide.featurizer.of_genome(self.encoding.genome_of(row))
+
+    def _guided_refit(self, idx_np, objs_np) -> bool:
+        """Train on the generation's own (rows, objectives) — finite lanes
+        only; the tensor path needs no cache round-trip for training data."""
+        mask = np.isfinite(objs_np).all(axis=1)
+        if int(mask.sum()) < self.guide.min_fit:
+            return False
+        X = [self._row_features(r) for r in idx_np[mask]]
+        self.guide.model.fit(X, objs_np[mask])
+        self.guide.n_refits += 1
+        return True
+
+    def _guided_select(self, child_np):
+        """The predicted-Pareto ``P - E`` slice of the over-generated
+        children (pass-through before the first fit)."""
+        n_off = self.pop_size - self.n_elite
+        if not self.guide.model.trained:
+            return child_np[:n_off]
+        feats = [self._row_features(r) for r in child_np]
+        kept = sorted(self.guide.select(feats, n_off))
+        return child_np[kept]
 
     def _init_pop(self, key):
         """Lane 0 = baseline schedule, the rest uniform over the space."""
@@ -185,11 +249,15 @@ class TensorGevoML:
         with open(tmp, "wb") as f:
             np.savez(f, idx=np.asarray(idx), key=np.asarray(key))
         os.replace(tmp, npz)
-        atomic_write_json(os.path.join(self.checkpoint_dir, "latest.json"), {
+        doc = {
             "engine": "tensor", "gen": gen, "seed": self.seed,
             "program_fingerprint": self.evaluator.fingerprint,
             "original_fitness": list(original), "history": history,
-        })
+        }
+        if self.guide is not None:
+            doc["surrogate"] = self.guide.stats()
+        atomic_write_json(os.path.join(self.checkpoint_dir, "latest.json"),
+                          doc)
 
     def _load_checkpoint(self):
         path = os.path.join(self.checkpoint_dir, "latest.json")
@@ -220,6 +288,8 @@ class TensorGevoML:
                 import jax.numpy as jnp
                 idx = jnp.asarray(idx_np)
                 key = jnp.asarray(key_np)
+                if self.guide is not None:
+                    self.guide.restore(doc.get("surrogate"))
                 t0 = _time.perf_counter() - (history[-1]["wall_s"]
                                              if history else 0.0)
             else:
@@ -236,10 +306,21 @@ class TensorGevoML:
                 history = []
                 start_gen = 0
 
-            step = self.step_fn()
+            import jax.numpy as jnp
+            step = (self.step_fn() if self.guide is None
+                    else self.over_step_fn())
             for gen in range(start_gen, generations):
-                idx, key, metrics = step(idx, key, self.crossover_rate,
-                                         self.mutation_rate)
+                if self.guide is None:
+                    idx, key, metrics = step(idx, key, self.crossover_rate,
+                                             self.mutation_rate)
+                else:
+                    elites, children, objs, key, metrics = step(
+                        idx, key, self.crossover_rate, self.mutation_rate)
+                    self._guided_refit(np.asarray(idx), np.asarray(objs))
+                    child_sel = self._guided_select(np.asarray(children))
+                    idx = jnp.concatenate(
+                        [elites, jnp.asarray(child_sel, elites.dtype)],
+                        axis=0)
                 history.append({
                     "gen": gen,
                     "best_time": float(metrics["best_time"]),
@@ -249,6 +330,8 @@ class TensorGevoML:
                     "evals": self.pop_size * (gen + 1),
                     "wall_s": _time.perf_counter() - t0,
                 })
+                if self.guide is not None:
+                    history[-1]["surrogate"] = self.guide.stats()
                 if self.verbose:
                     h = history[-1]
                     print(f"[gen {gen:3d}] time={h['best_time']:.3e} "

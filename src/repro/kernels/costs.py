@@ -295,6 +295,25 @@ def schedule_cols(kernel: str, genome: dict) -> dict:
             for col, knob, flag in COL_SPECS[kernel]}
 
 
+def schedule_features(kernel: str, genome: dict, **shape) -> dict:
+    """Numeric surrogate features of one genome on one shape — the roofline
+    and VMEM counters the launch gates already compute, exported as a flat
+    ``{name: float}`` dict for :mod:`repro.core.surrogate`.  Deterministic,
+    never raises: un-launchable configs report ``launchable=0`` instead of
+    :class:`InvalidVariant`, because the surrogate must featurize exactly the
+    candidates the evaluator would reject."""
+    cols = schedule_cols(kernel, genome)
+    time, valid, gates = _TERMS[kernel](np, cols, **shape)
+    used = max((float(np.asarray(a[1]))
+                for kind, _, *a in gates if kind == "vmem"), default=0.0)
+    return {
+        "log_static_time": float(np.log(max(float(time), 1e-30))),
+        "launchable": float(bool(np.asarray(valid))),
+        "is_ref": float(bool(cols.get("is_ref", False))),
+        "vmem_frac": used / VMEM_BYTES,
+    }
+
+
 def schedule_gates(kernel: str, genome: dict, **shape):
     """The launch-gate tuples one scalar genome faces on the given shape —
     empty for ``ref`` impls (nothing to launch).  This is the linter's entry

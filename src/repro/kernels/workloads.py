@@ -34,7 +34,7 @@ import numpy as np
 from ..core.evaluator import WorkloadSpec
 from ..core.fitness import InvalidVariant, KernelWorkload, measured_time
 from ..core.schedule import ScheduleSpace
-from .costs import schedule_time
+from .costs import schedule_features, schedule_time
 from .flash_attention.ops import flash_attention
 from .flash_attention.ref import attention_ref
 from .mamba_scan.ops import mamba_scan
@@ -186,12 +186,16 @@ def build_kernel_workload(kernel: str = "rmsnorm", *,
             t = measured_time(jax.jit(_variant_fn(kernel, genome)), inputs)
         return t, err
 
+    def feature_probe(genome: dict) -> dict:
+        return schedule_features(kernel, genome, **shape)
+
     return KernelWorkload(
         name=f"kernel/{kernel}",
         program=space.encode(BASELINES[kernel]),
         space=space,
         runner=runner,
         static_probe=static_probe,
+        feature_probe=feature_probe,
         time_mode=time_mode,
         spec=WorkloadSpec.make(
             "repro.kernels.workloads:build_kernel_workload",
@@ -267,6 +271,16 @@ def build_joint_kernel_workload(*, time_mode: str = "static",
             err = e if err is None else max(err, e)
         return t, err
 
+    def feature_probe(genome: dict) -> dict:
+        # per-kernel counters under <kernel>.-prefixed names, mirroring the
+        # joint space's knob naming
+        feats: dict[str, float] = {}
+        for kernel in KERNELS:
+            sub = schedule_features(kernel, sub_genome(genome, kernel),
+                                    **SHAPES[kernel])
+            feats.update({f"{kernel}.{k}": v for k, v in sub.items()})
+        return feats
+
     def error_fn(kernel: str):
         return lambda g: _kernel_error(kernel, g, inputs[kernel],
                                        refs[kernel])
@@ -286,6 +300,7 @@ def build_joint_kernel_workload(*, time_mode: str = "static",
         space=space,
         runner=runner,
         static_probe=static_probe,
+        feature_probe=feature_probe,
         time_mode=time_mode,
         spec=WorkloadSpec.make(
             "repro.kernels.workloads:build_joint_kernel_workload",
@@ -334,7 +349,8 @@ def scheduled_kernel_fn(kernel: str, registry=None, shape=None):
 def evolve_kernel_schedule(workload, *, generations: int = 6,
                            pop_size: int = 10, seed: int = 0,
                            evaluator=None, verbose: bool = False,
-                           err_tol: float = 1e-3):
+                           err_tol: float = 1e-3, surrogate: bool = False,
+                           surrogate_keep: float = 0.5):
     """The canonical kernel-schedule search configuration, shared by the
     example, the benchmarks, and the A/B suite: NSGA-II over ``attr_tweak``
     patches (schedule genomes are a handful of genes, so a high mutation
@@ -350,7 +366,8 @@ def evolve_kernel_schedule(workload, *, generations: int = 6,
     s = GevoML(workload, pop_size=pop_size, n_elite=pop_size // 2,
                seed=seed, init_mutations=2, mutation_rate=0.9,
                operators={"attr_tweak": 1.0}, evaluator=evaluator,
-               verbose=verbose)
+               verbose=verbose, surrogate=surrogate,
+               surrogate_keep=surrogate_keep)
     res = s.run(generations=generations)
     _, e_def = res.original_fitness
     ok = [i for i in res.pareto if i.fitness[1] <= e_def + err_tol]

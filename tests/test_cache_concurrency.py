@@ -98,6 +98,25 @@ def test_cross_writer_hits_are_counted(tmp_path):
     b.close()
 
 
+def test_cross_hits_counted_once_per_key(tmp_path):
+    """Regression: repeated gets of the same foreign key (in-batch
+    duplicates, re-queries across generations) must not inflate
+    cross_hits — each shared entry counts at most once."""
+    path = str(tmp_path / "fitness.jsonl")
+    a = FitnessCache(path, writer="a")
+    a.put("one", EvalOutcome(fitness=(1.0, 2.0)))
+    a.put("two", EvalOutcome(fitness=(3.0, 4.0)))
+    b = FitnessCache(path, writer="b")
+    for _ in range(5):
+        b.get("one")
+    assert b.cross_hits == 1
+    b.get("two")
+    b.get("two")
+    assert b.cross_hits == 2             # distinct entries still count
+    a.close()
+    b.close()
+
+
 def test_untagged_records_stay_compatible(tmp_path):
     """Caches written before writer tags existed load fine and never count
     as cross hits."""

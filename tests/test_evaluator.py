@@ -231,3 +231,116 @@ def test_make_evaluator_dispatch(tiny_workload, tmp_path):
     assert isinstance(ev, ParallelEvaluator)
     assert ev.cache.path is not None
     ev.close()
+    ev = make_evaluator(tiny_workload, features=True)
+    assert ev.featurizer is not None
+    ev.close()
+
+
+# -- bugfix regressions: stats split, transient containment -----------------
+
+def test_stats_split_executed_vs_screened(tiny_workload):
+    """Regression: stats() must split cache misses into executed ones and
+    statically screened ones — `misses` alone conflates them."""
+    ev = make_evaluator(tiny_workload, screen=True)
+    ev.evaluate_one(())                              # executes
+    ev.evaluate_one((Edit("delete", target_uid=10_000),))  # screens: invalid
+    s = ev.stats()
+    assert s["executed_misses"] == ev.n_evals == 1
+    assert s["screened"] == ev.n_screened == 1
+    assert s["executed_misses"] + s["screened"] == s["misses"]
+    ev.close()
+
+
+def test_transient_outcomes_never_persisted(tmp_path):
+    """Regression (cache poisoning): a transient failure is remembered for
+    the current run only — it never reaches the JSONL, so the next run
+    re-evaluates instead of trusting a crashed worker's verdict."""
+    path = str(tmp_path / "c.jsonl")
+    c = FitnessCache(path)
+    c.put("boom", EvalOutcome(fitness=None, error="crash", transient=True))
+    c.put("good", EvalOutcome(fitness=(1.0, 2.0)))
+    assert c.get("boom") is not None     # this run does not retry it
+    c.close()
+    c2 = FitnessCache(path)
+    assert "boom" not in c2              # ... but no future run inherits it
+    assert c2.get("good").fitness == (1.0, 2.0)
+    c2.close()
+
+
+def test_worker_eval_contains_arbitrary_exceptions(tiny_workload,
+                                                   monkeypatch):
+    """Regression: a non-invalid exception in a worker (backend error, OOM)
+    must come back as a contained ("error", traceback) result instead of
+    propagating through pool.map and killing the whole search."""
+    from repro.core import evaluator as ev_mod
+    from repro.core.edits import Patch
+    from repro.core.fitness import InvalidVariant
+
+    class Boom:
+        program = tiny_workload.program
+
+        def evaluate(self, program):
+            raise RuntimeError("backend exploded")
+
+    monkeypatch.setattr(ev_mod, "_WORKER_WORKLOAD", Boom())
+    tag, payload = ev_mod._worker_eval(Patch.coerce(()))
+    assert tag == "error"
+    assert "backend exploded" in payload and "Traceback" in payload
+
+    class Invalid(Boom):
+        def evaluate(self, program):
+            raise InvalidVariant("broken contract")
+
+    monkeypatch.setattr(ev_mod, "_WORKER_WORKLOAD", Invalid())
+    tag, payload = ev_mod._worker_eval(Patch.coerce(()))
+    assert tag == "invalid" and payload == "broken contract"
+
+
+def test_worker_crash_marked_transient_and_not_persisted(tiny_workload,
+                                                         tmp_path,
+                                                         monkeypatch):
+    """A crashed dispatch yields a transient outcome: invalid for this run,
+    absent from the persistent cache, re-evaluated by the next run."""
+    path = str(tmp_path / "c.jsonl")
+    ev = ParallelEvaluator(tiny_workload, n_workers=2,
+                           cache=FitnessCache(path))
+
+    class CrashPool:
+        def map(self, fn, patches, chunksize=None):
+            return [("error", "Traceback ... boom")] * len(patches)
+
+    monkeypatch.setattr(ev, "_ensure_pool", lambda: CrashPool())
+    out = ev.evaluate_one(())
+    assert not out.ok and out.transient
+    key = ev.key(())
+    assert key in ev.cache               # contained for this run
+    ev.cache.close()
+
+    ev2 = SerialEvaluator(tiny_workload, cache=FitnessCache(path))
+    assert key not in ev2.cache          # the crash never reached disk
+    assert ev2.evaluate_one(()).ok       # a healthy run re-measures it
+    ev2.close()
+
+
+def test_search_survives_transient_batch(tiny_workload, tmp_path):
+    """One flaky dispatch mid-run must not kill the search or leak its
+    failure into the persistent cache."""
+    path = str(tmp_path / "c.jsonl")
+
+    class Flaky(SerialEvaluator):
+        calls = 0
+
+        def _evaluate_misses(self, patches):
+            Flaky.calls += 1
+            if Flaky.calls == 2:    # one bad dispatch after the original
+                return [EvalOutcome(fitness=None, error="boom",
+                                    transient=True) for _ in patches]
+            return super()._evaluate_misses(patches)
+
+    ev = Flaky(tiny_workload, cache=FitnessCache(path))
+    res = GevoML(tiny_workload, pop_size=6, n_elite=3, seed=0,
+                 init_mutations=2, evaluator=ev).run(generations=2)
+    assert Flaky.calls > 2
+    assert len(res.pareto) >= 1
+    ev.close()
+    assert "boom" not in open(path).read()

@@ -8,7 +8,8 @@ import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
-from benchmarks.report import perf_cell_table, suite_headlines  # noqa: E402
+from benchmarks.report import (perf_cell_table, suite_headlines,  # noqa: E402
+                               surrogate_rank_table)
 
 
 def _write(d, name, doc):
@@ -100,9 +101,38 @@ class TestSuiteHeadlines:
             "islands vs panmictic = 1.0x hypervolume at 16384 genome-evals "
             "(117.0x the PR-4 budget, 1242 cross-island cache hits) |")
 
+    def test_surrogate_golden(self, tmp_path, capsys):
+        d = str(tmp_path)
+        _write(d, "surrogate_ab.json",
+               {"hv_ratio_guided_vs_unguided": 1.0926,
+                "executed_frac_guided_vs_unguided": 0.6364,
+                "guided": {"surrogate": {"ranked": 48, "kept": 30,
+                                         "refits": 10}}})
+        suite_headlines(d)
+        out = capsys.readouterr().out.splitlines()
+        assert out[3] == (
+            "| surrogate | surrogate-guided search = 1.0926x hypervolume "
+            "vs unguided at 64% of the executed evaluations, equal genome "
+            "budget (kept 30/48 ranked offspring over 10 refits) |")
+
     def test_no_records(self, tmp_path, capsys):
         suite_headlines(str(tmp_path))
         assert "(none)" in capsys.readouterr().out
+
+    def test_surrogate_rank_table_golden(self, tmp_path, capsys):
+        d = str(tmp_path)
+        surrogate_rank_table(d)               # no record: prints nothing
+        assert capsys.readouterr().out == ""
+        _write(d, "surrogate_ab.json",
+               {"guided": {"per_operator": {
+                   "attr_tweak": {"proposed": 66, "ranked": 260,
+                                  "kept": 171},
+                   "noop_op": {"proposed": 3, "ranked": 0, "kept": 0}}}})
+        surrogate_rank_table(d)
+        out = capsys.readouterr().out.splitlines()
+        assert out[1] == "| operator | proposed | ranked | kept | survival |"
+        assert out[3] == "| attr_tweak | 66 | 260 | 171 | 66% |"
+        assert out[4] == "| noop_op | 3 | 0 | 0 |  |"
 
     def test_repo_records_render(self, capsys):
         """Whatever records exist under experiments/perf must render without

@@ -74,7 +74,7 @@ def test_history_carries_per_operator_stats(result):
         for counters in ops.values():
             assert set(counters) == {"proposed", "applied", "valid",
                                      "elite", "invalid", "noop",
-                                     "equivalent"}
+                                     "equivalent", "ranked", "kept"}
             assert all(v >= 0 for v in counters.values())
             assert counters["applied"] <= counters["proposed"]
     last = result.history[-1]["operators"]

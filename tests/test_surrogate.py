@@ -1,0 +1,376 @@
+"""The surrogate layer: featurizers, the ridge cost model, cache datasets,
+the pre-rank guide, and surrogate-guided search in both engines."""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.core.edits import Edit
+from repro.core.evaluator import (EvalOutcome, FitnessCache, SerialEvaluator,
+                                  make_evaluator)
+from repro.core.search import GevoML
+from repro.core.surrogate import (ProgramFeaturizer, ScheduleFeaturizer,
+                                  SurrogateGuide, SurrogateModel,
+                                  dataset_from_cache, dataset_from_jsonl,
+                                  feature_matrix, load_dataset,
+                                  make_featurizer, pareto_order, spearman)
+from repro.kernels.workloads import (build_joint_kernel_workload,
+                                     build_kernel_workload)
+from repro.workloads.twofc import build_twofc_training_workload
+
+_MINI_CACHE = os.path.join(os.path.dirname(__file__), "..",
+                           "experiments", "caches", "rmsnorm_mini.jsonl")
+
+
+@pytest.fixture(scope="module")
+def kernel_workload():
+    return build_kernel_workload("rmsnorm", time_mode="static")
+
+
+@pytest.fixture(scope="module")
+def ir_workload():
+    return build_twofc_training_workload(batch=32, hidden=16, steps=5,
+                                         n_train=256, n_test=256)
+
+
+# -- featurizers ------------------------------------------------------------
+
+class TestFeaturizers:
+    def test_schedule_one_hot_plus_probe(self, kernel_workload):
+        w = kernel_workload
+        f = make_featurizer(w)
+        assert isinstance(f, ScheduleFeaturizer)
+        row = f(())  # empty patch = the baseline schedule
+        assert len(row) == len(f.feature_names)
+        # exactly one choice is hot per knob
+        n_knobs = len(w.space.names())
+        n_onehot = sum(len(w.space.choices(k)) for k in w.space.names())
+        assert sum(row[:n_onehot]) == n_knobs
+        # the roofline/VMEM probe counters ride along, in sorted key order
+        probe_names = f.feature_names[n_onehot:]
+        assert "log_static_time" in probe_names
+        assert "vmem_frac" in probe_names
+        assert tuple(probe_names) == tuple(sorted(probe_names))
+
+    def test_schedule_patch_matches_genome_path(self, kernel_workload):
+        w = kernel_workload
+        f = ScheduleFeaturizer(w)
+        assert f(()) == f.of_genome(w.space.decode(w.program))
+
+    def test_unfeaturizable_patch_raises(self, kernel_workload):
+        f = ScheduleFeaturizer(kernel_workload)
+        broken = (Edit("delete",
+                       target_uid=kernel_workload.program.ops[0].uid),)
+        with pytest.raises(Exception):
+            f(broken)
+
+    def test_program_featurizer(self, ir_workload):
+        f = make_featurizer(ir_workload)
+        assert isinstance(f, ProgramFeaturizer)
+        row = f(())
+        assert len(row) == len(f.feature_names)
+        named = dict(zip(f.feature_names, row))
+        assert named["n_edits"] == 0.0
+        assert named["d_static_time"] == 0.0
+        assert named["n_ops"] >= named["n_norm_ops"] > 0
+
+    def test_make_featurizer_none_for_alien_workload(self):
+        assert make_featurizer(object()) is None
+
+    def test_feature_matrix_stacks(self, kernel_workload):
+        f = ScheduleFeaturizer(kernel_workload)
+        X = feature_matrix(f, [(), ()])
+        assert X.shape == (2, len(f.feature_names))
+
+
+# -- the cost model ---------------------------------------------------------
+
+def _synthetic(n=64, seed=0):
+    rng = np.random.default_rng(seed)
+    X = rng.normal(size=(n, 3))
+    t = np.exp(0.8 * X[:, 0] - 0.3 * X[:, 1] - 10.0)
+    e = np.maximum(0.0, 0.1 * X[:, 2] + 0.2)
+    return X, np.stack([t, e], axis=1)
+
+
+class TestModel:
+    def test_fit_ranks_time(self):
+        X, Y = _synthetic()
+        m = SurrogateModel().fit(X, Y)
+        met = m.metrics(X, Y)
+        assert met["n"] == len(X)
+        assert met["r2_time"] > 0.99
+        assert met["spearman_time"] > 0.95
+        assert m.predict(X).shape == (len(X), 2)
+        assert (m.predict(X)[:, 0] > 0).all()
+
+    def test_predict_before_fit_raises(self):
+        with pytest.raises(RuntimeError):
+            SurrogateModel().predict([[1.0]])
+
+    def test_doc_roundtrip(self, tmp_path):
+        X, Y = _synthetic()
+        m = SurrogateModel(feature_names=("a", "b", "c"), l2=1e-2).fit(X, Y)
+        back = SurrogateModel.from_doc(m.to_doc())
+        assert np.allclose(back.predict(X), m.predict(X))
+        path = str(tmp_path / "model.json")
+        m.save(path)
+        loaded = SurrogateModel.load(path)
+        assert loaded.feature_names == ("a", "b", "c")
+        assert np.allclose(loaded.predict(X), m.predict(X))
+
+    def test_from_doc_rejects_alien_kind(self):
+        with pytest.raises(ValueError):
+            SurrogateModel.from_doc({"kind": "not-a-model"})
+
+    def test_constant_column_survives_standardization(self):
+        X, Y = _synthetic()
+        X = np.concatenate([X, np.ones((len(X), 1))], axis=1)
+        m = SurrogateModel().fit(X, Y)
+        assert np.isfinite(m.predict(X)).all()
+
+    def test_spearman(self):
+        assert spearman([1, 2, 3], [10, 20, 30]) == pytest.approx(1.0)
+        assert spearman([1, 2, 3], [3, 2, 1]) == pytest.approx(-1.0)
+        assert spearman([1, 2, 3], [5, 5, 5]) == 0.0
+        # ties share their average rank
+        assert spearman([1, 1, 2], [1, 1, 2]) == pytest.approx(1.0)
+
+    def test_pareto_order_prefers_nondominated(self):
+        objs = [[2.0, 2.0],   # dominated
+                [1.0, 1.0],   # dominates everything
+                [3.0, 0.5],   # front (best error)
+                [0.5, 3.0]]   # front (best time)
+        order = pareto_order(objs)
+        assert set(order) == {0, 1, 2, 3}
+        assert order.index(0) == 3       # the dominated point ranks last
+        assert order[0] in (1, 2, 3)
+
+
+# -- cache datasets ---------------------------------------------------------
+
+class TestDataset:
+    def test_from_cache_only_ok_rows(self):
+        c = FitnessCache()
+        c.put("a", EvalOutcome(fitness=(1e-5, 0.1)), features=[1.0, 0.0])
+        c.put("b", EvalOutcome(fitness=None, error="bad"),
+              features=[0.0, 1.0])
+        c.put("c", EvalOutcome(fitness=(2e-5, 0.2)))   # no features
+        keys, X, Y = dataset_from_cache(c)
+        assert keys == ["a"]
+        assert X.shape == (1, 2) and Y.shape == (1, 2)
+
+    def test_from_jsonl_robust(self, tmp_path):
+        path = str(tmp_path / "cache.jsonl")
+        with open(path, "w") as f:
+            f.write(json.dumps({"key": "a", "fitness": [1e-5, 0.1],
+                                "features": [1.0, 2.0]}) + "\n")
+            f.write(json.dumps({"key": "a", "fitness": [9e-5, 0.9],
+                                "features": [9.0, 9.0]}) + "\n")
+            f.write(json.dumps({"key": "b", "fitness": None,
+                                "features": [3.0, 4.0]}) + "\n")
+            f.write(json.dumps({"key": "c", "fitness": [2e-5, 0.2],
+                                "features": [5.0, 6.0, 7.0]}) + "\n")
+            f.write('{"key": "torn"')   # crashed writer
+        keys, X, Y = dataset_from_jsonl(path)
+        # last write per key wins; no-fitness rows drop; width-mismatched
+        # rows ("c") are skipped
+        assert keys == ["a"]
+        assert X.tolist() == [[9.0, 9.0]]
+        assert Y.tolist() == [[9e-5, 0.9]]
+
+    def test_load_dataset_dispatch(self, tmp_path):
+        path = str(tmp_path / "cache.jsonl")
+        with open(path, "w") as f:
+            f.write(json.dumps({"key": "a", "fitness": [1e-5, 0.1],
+                                "features": [1.0]}) + "\n")
+        keys, _, _ = load_dataset(path)
+        assert keys == ["a"]
+        c = FitnessCache()
+        c.put("z", EvalOutcome(fitness=(1e-5, 0.1)), features=[1.0])
+        keys, _, _ = load_dataset(c)
+        assert keys == ["z"]
+
+    def test_committed_mini_cache_trains(self):
+        """The fixture CI trains on must stay loadable and well-formed."""
+        if not os.path.exists(_MINI_CACHE):
+            pytest.skip("mini cache fixture not present")
+        keys, X, Y = dataset_from_jsonl(_MINI_CACHE)
+        assert len(keys) >= 8
+        m = SurrogateModel().fit(X, Y)
+        assert m.metrics(X, Y)["r2_time"] > 0.5
+
+
+# -- the guide --------------------------------------------------------------
+
+class TestGuide:
+    def test_keep_validated(self, kernel_workload):
+        with pytest.raises(ValueError):
+            SurrogateGuide(kernel_workload, keep=0.0)
+        with pytest.raises(ValueError):
+            SurrogateGuide(kernel_workload, keep=1.5)
+
+    def test_unfeaturizable_workload_rejected(self):
+        with pytest.raises(ValueError):
+            SurrogateGuide(object())
+
+    def test_keep_of(self, kernel_workload):
+        g = SurrogateGuide(kernel_workload, keep=0.5)
+        assert g.keep_of(8) == 4
+        assert g.keep_of(7) == 4     # ceil
+        assert g.keep_of(1) == 1     # never zero
+        assert SurrogateGuide(kernel_workload, keep=0.01).keep_of(8) == 1
+
+    def test_refit_needs_min_rows(self, kernel_workload):
+        g = SurrogateGuide(kernel_workload, min_fit=4)
+        c = FitnessCache()
+        for i in range(3):
+            c.put(f"k{i}", EvalOutcome(fitness=(1e-5 * (i + 1), 0.0)),
+                  features=[float(i), 1.0])
+        assert not g.refit(c)
+        assert not g.model.trained
+        c.put("k3", EvalOutcome(fitness=(4e-5, 0.0)), features=[3.0, 1.0])
+        assert g.refit(c)
+        assert g.model.trained and g.n_refits == 1
+
+    def test_select_counts_and_restore(self, kernel_workload):
+        g = SurrogateGuide(kernel_workload, min_fit=2)
+        c = FitnessCache()
+        for i in range(4):
+            c.put(f"k{i}", EvalOutcome(fitness=(1e-5 * (i + 1), 0.0)),
+                  features=[float(i)] + [0.0] * (
+                      len(g.featurizer.feature_names) - 1))
+        assert g.refit(c)
+        feats = [[float(i)] + [0.0] * (len(g.featurizer.feature_names) - 1)
+                 for i in range(6)]
+        kept = g.select(feats, room=2)
+        assert len(kept) == 2 and kept <= set(range(6))
+        st = g.stats()
+        assert st["ranked"] == 6 and st["kept"] == 2 and st["trained"]
+        g2 = SurrogateGuide(kernel_workload)
+        g2.restore(st)
+        assert g2.n_ranked == 6 and g2.n_kept == 2
+        g2.restore(None)   # no-op
+        assert g2.n_ranked == 6
+
+
+# -- guided search: GevoML --------------------------------------------------
+
+class TestGuidedSearch:
+    def test_guided_respects_per_generation_budget(self, kernel_workload):
+        ev0 = SerialEvaluator(kernel_workload)
+        r0 = GevoML(kernel_workload, pop_size=6, n_elite=3, seed=0,
+                    evaluator=ev0, operators={"attr_tweak": 1.0}
+                    ).run(generations=5)
+        assert "surrogate" not in r0.history[-1]
+
+        ev = SerialEvaluator(kernel_workload)
+        s = GevoML(kernel_workload, pop_size=6, n_elite=3, seed=0,
+                   evaluator=ev, operators={"attr_tweak": 1.0},
+                   surrogate=True, surrogate_keep=0.5)
+        res = s.run(generations=5)
+        st = res.history[-1]["surrogate"]
+        assert st["ranked"] >= st["kept"] >= 0
+        assert st == s.guide.stats()
+        # the evaluator inherited the guide's featurizer, so the cache
+        # this run writes doubles as surrogate training data
+        assert s.evaluator.featurizer is s.guide.featurizer
+        assert len(dataset_from_cache(s.cache)[0]) > 0
+        # the binding guarantee: once the model is trained, a generation
+        # fill executes at most keep_of(pop - elite) novel candidates
+        budget = s.guide.keep_of(6 - 3)
+        rows = res.history
+        trained_deltas = [
+            rows[i]["evals"] - rows[i - 1]["evals"]
+            for i in range(1, len(rows))
+            if rows[i - 1]["surrogate"]["trained"]]
+        assert trained_deltas, "model never trained in 5 generations"
+        assert all(d <= budget for d in trained_deltas)
+
+    def test_guided_operator_stats_have_survival_counters(self,
+                                                          kernel_workload):
+        ev = SerialEvaluator(kernel_workload)
+        s = GevoML(kernel_workload, pop_size=6, seed=1, evaluator=ev,
+                   operators={"attr_tweak": 1.0}, surrogate=True)
+        res = s.run(generations=3)
+        row = res.operator_stats()["attr_tweak"]
+        assert "ranked" in row and "kept" in row
+        assert row["ranked"] >= row["kept"]
+
+    def test_guided_checkpoint_resume_restores_counters(self,
+                                                        kernel_workload,
+                                                        tmp_path):
+        d = str(tmp_path / "ckpt")
+        s1 = GevoML(kernel_workload, pop_size=6, seed=0,
+                    operators={"attr_tweak": 1.0}, surrogate=True,
+                    checkpoint_dir=d)
+        s1.run(generations=2)
+        before = s1.guide.stats()
+        s2 = GevoML(kernel_workload, pop_size=6, seed=0,
+                    operators={"attr_tweak": 1.0}, surrogate=True,
+                    checkpoint_dir=d)
+        s2.run(generations=4, resume=True)
+        after = s2.guide.stats()
+        assert after["ranked"] >= before["ranked"]
+        assert after["kept"] >= before["kept"]
+
+
+# -- guided search: the tensor engine ---------------------------------------
+
+@pytest.mark.slow
+class TestGuidedTensor:
+    def test_guided_tensor_runs_and_reports(self):
+        from repro.core.tensor_evo import TensorGevoML
+
+        w = build_joint_kernel_workload()
+        with TensorGevoML(w, pop_size=16, n_elite=4, seed=0) as eng:
+            r0 = eng.run(generations=2)
+        assert "surrogate" not in r0.history[-1]
+        with TensorGevoML(w, pop_size=16, n_elite=4, seed=0,
+                          surrogate=True, surrogate_keep=0.5) as eng:
+            r1 = eng.run(generations=3)
+        st = r1.history[-1]["surrogate"]
+        assert st["ranked"] >= st["kept"] >= 0
+        assert st["refits"] >= 1
+
+
+# -- the CLI ----------------------------------------------------------------
+
+class TestCli:
+    @pytest.fixture()
+    def cache_path(self, tmp_path, kernel_workload):
+        if os.path.exists(_MINI_CACHE):
+            return _MINI_CACHE
+        # regenerate an equivalent mini-cache when the fixture is absent
+        path = str(tmp_path / "mini.jsonl")
+        ev = make_evaluator(kernel_workload, cache_path=path, features=True)
+        s = GevoML(kernel_workload, pop_size=6, seed=0, evaluator=ev,
+                   operators={"attr_tweak": 1.0})
+        s.run(generations=3)
+        ev.close()
+        return path
+
+    def test_train_eval_rank_deterministic(self, cache_path, tmp_path,
+                                           capsys):
+        from repro.core.surrogate.__main__ import main
+
+        out = str(tmp_path / "model.json")
+        assert main(["train", "--cache", cache_path, "--out", out]) == 0
+        doc = json.loads(capsys.readouterr().out)
+        assert doc["rows"] >= 8 and doc["out"] == out
+        assert os.path.exists(out)
+
+        assert main(["eval", "--model", out, "--cache", cache_path]) == 0
+        met = json.loads(capsys.readouterr().out)
+        assert met["rows"] == doc["rows"]
+        assert met["metrics"]["n"] == doc["rows"]
+
+        assert main(["rank", "--model", out, "--cache", cache_path,
+                     "--top", "5"]) == 0
+        first = capsys.readouterr().out
+        assert main(["rank", "--model", out, "--cache", cache_path,
+                     "--top", "5"]) == 0
+        assert capsys.readouterr().out == first   # rank is deterministic
+        assert "| rank |" in first
