@@ -72,6 +72,15 @@ islands,serving,tensor_evo,analysis,surrogate,all}``):
   ranked/kept table, writing experiments/perf/surrogate_ab.json (results
   quoted in EXPERIMENTS.md).
 
+* ``liveloop`` — closes the full evolve->serve->measure->promote loop on a
+  synthesized bursty trace (``core.liveloop``): a background GevoML island
+  evolves the serve schedule against replayed traffic, the canary state
+  machine promotes the winner under measured guardrails, and the promoted
+  artifact must re-measure at >= 1.0x the default schedule's throughput on
+  the real engine; a second, fault-injected run must be rolled back and
+  its fingerprint blocked.  Writes experiments/perf/liveloop_ab.json
+  (results quoted in EXPERIMENTS.md).
+
   PYTHONPATH=src python -m benchmarks.perf_ab
   PYTHONPATH=src python -m benchmarks.perf_ab --suite evaluator --workers 2
   PYTHONPATH=src python -m benchmarks.perf_ab --suite operators
@@ -79,6 +88,7 @@ islands,serving,tensor_evo,analysis,surrogate,all}``):
   PYTHONPATH=src python -m benchmarks.perf_ab --suite islands
   PYTHONPATH=src python -m benchmarks.perf_ab --suite serving
   PYTHONPATH=src python -m benchmarks.perf_ab --suite tensor_evo
+  PYTHONPATH=src python -m benchmarks.perf_ab --suite liveloop
 """
 
 from __future__ import annotations
@@ -91,11 +101,43 @@ os.environ.setdefault("XLA_FLAGS",
 import argparse  # noqa: E402
 import json  # noqa: E402
 import time  # noqa: E402
+from contextlib import contextmanager  # noqa: E402
 
 from repro.configs import get_config  # noqa: E402
 from repro.launch.dryrun import run_cell  # noqa: E402
 
 OUT = "experiments/perf"
+
+
+@contextmanager
+def pinned_xla_host_devices(count: int = 512):
+    """Pin ``XLA_FLAGS`` host-device-count for one suite, restoring the
+    previous value afterwards.
+
+    jax reads ``XLA_FLAGS`` exactly once, at first backend initialization,
+    so a suite whose numerics depend on the device count (the surrogate
+    A/B's roofline/VMEM feature probes see per-device shapes) must pin the
+    flag *and verify the backend actually honors it* — if another suite
+    already initialized jax at a different count, re-exporting the flag is
+    silently ignored.  This guard makes that failure loud instead of a
+    numbers drift, which is what makes suites order-independent (see
+    EXPERIMENTS.md)."""
+    prev = os.environ.get("XLA_FLAGS")
+    os.environ["XLA_FLAGS"] = \
+        f"--xla_force_host_platform_device_count={count}"
+    try:
+        import jax
+        n = jax.device_count()
+        if n != count:
+            print(f"[xla] WARNING: backend already initialized with {n} "
+                  f"host devices (wanted {count}); results may differ "
+                  f"from an isolated run of this suite", flush=True)
+        yield
+    finally:
+        if prev is None:
+            os.environ.pop("XLA_FLAGS", None)
+        else:
+            os.environ["XLA_FLAGS"] = prev
 
 
 def run(tag: str, arch: str, shape: str, cfg, micro: int = 1) -> dict:
@@ -485,9 +527,10 @@ def serving_ab(generations: int = 2, seed: int = 0,
     from repro.configs import smoke_config
     from repro.core import GevoML
     from repro.core.deploy import (DEFAULT_ENGINE_SCHEDULE, Artifact,
-                                   ArtifactRegistry, ServeEngine, demo_trace,
+                                   ArtifactRegistry, ServeEngine,
                                    engine_schedule_from, build_serve_workload)
     from repro.core.evaluator import FitnessCache, SerialEvaluator
+    from repro.core.liveloop.traces import demo_requests
 
     arch = "qwen3-0.6b"
     trace_cfg = dict(n_requests=12, prompt_len=8, gen=8)
@@ -527,7 +570,7 @@ def serving_ab(generations: int = 2, seed: int = 0,
                                  + trace_cfg["gen"],
                                  max_slots=schedule["max_slots"],
                                  prefill_chunk=schedule["prefill_chunk"])
-            engine.run(demo_trace(cfg, seed=seed, **trace_cfg),
+            engine.run(demo_requests(cfg, seed=seed, **trace_cfg),
                        stagger=stagger)
             stats = engine.stats()
             if publish and rep == 0:
@@ -837,7 +880,17 @@ def surrogate_ab(generations: int = 10, seed: int = 5,
     ridge cost model trained from the run's own FitnessCache pick the
     predicted-Pareto slice that actually reaches the evaluator.  The bar
     (see ISSUE/EXPERIMENTS.md): guided hypervolume >= 1.0x unguided while
-    executing <= 70% of the unguided arm's evaluations."""
+    executing <= 70% of the unguided arm's evaluations.
+
+    The feature probes' VMEM/roofline numbers depend on the XLA host
+    device count, so the whole suite runs under
+    :func:`pinned_xla_host_devices` — order-independent of whatever suite
+    ran (and initialized jax) before it."""
+    with pinned_xla_host_devices(512):
+        return _surrogate_ab_body(generations, seed, keep)
+
+
+def _surrogate_ab_body(generations: int, seed: int, keep: float) -> dict:
     from repro.core.evaluator import SerialEvaluator
     from repro.core.nsga2 import hypervolume_2d
     from repro.core.search import GevoML
@@ -894,6 +947,144 @@ def surrogate_ab(generations: int = 10, seed: int = 5,
     return out
 
 
+def liveloop_ab(ticks: int = 3, seed: int = 0) -> dict:
+    """The full live loop, both exits of the state machine.
+
+    **Promote arm** (real engine): a :class:`LiveLoopController` in
+    ``mode="real"`` evolves the serve schedule against a synthesized
+    bursty trace replayed through actual :class:`ServeEngine` instances,
+    canaries the winner under a deterministic traffic split, and promotes
+    it through the journaled guardrails.  The promoted artifact is then
+    re-measured from scratch (median of 3 full-trace replays) against the
+    default schedule — the bar is throughput >= 1.0x default.
+
+    **Rollback arm** (modeled, fault-injected): the same trace under the
+    deterministic engine model, with a fault hook tripling every canary
+    measurement's latency — the guardrails must roll the candidate back,
+    block its fingerprint, and never re-propose it."""
+    import statistics
+    import tempfile
+
+    from repro.configs import smoke_config
+    from repro.core.deploy import DEFAULT_ENGINE_SCHEDULE, ServeEngine
+    from repro.core.liveloop import (Guardrails, LiveLoopController, replay,
+                                     synthesize)
+
+    arch = "qwen3-0.6b"
+    cfg = smoke_config(arch)
+    trace = synthesize("bursty", vocab=cfg.vocab, n_requests=10,
+                       max_prompt=8, gen=6, seed=seed)
+    print(f"[liveloop_ab] trace: {trace.summary()}")
+
+    # -- promote arm: real measured loop ------------------------------------
+    root = tempfile.mkdtemp(prefix="liveloop_ab_")
+    # pop 10 over the 12-point schedule space all but enumerates it, and
+    # the canary gate tolerates 5% cross-slice measurement noise -- the
+    # hard >= 1.0x bar is the from-scratch re-measure below
+    ctl = LiveLoopController(root, trace=trace, arch=arch, mode="real",
+                             gens_per_tick=2, pop=10, seed=seed,
+                             fraction=0.5,
+                             guardrails=Guardrails(
+                                 min_throughput_ratio=0.95, windows=2))
+    t0 = time.perf_counter()
+    summaries = ctl.run(ticks)
+    wall_loop = time.perf_counter() - t0
+    for s in summaries:
+        print(f"[liveloop_ab] tick {s['tick']}: cand={s['candidate']} "
+              f"outcome={s['outcome'] or 'pending'}")
+    promoted = ctl.book.promoted
+    assert promoted is not None, \
+        f"no promotion after {ticks} ticks: {ctl.book.status()}"
+    live = ctl.registry.resolve(arch, "live", kind="serve")
+    assert live is not None and live.genome == promoted["genome"], \
+        "registry live pointer does not match the journaled promotion"
+
+    # -- re-measure the promoted schedule from scratch ----------------------
+    params = ctl._model()[1]
+
+    def measure(schedule):
+        runs = []
+        for i in range(4):
+            engine = ServeEngine(cfg, params, max_len=trace.max_len(),
+                                 max_slots=schedule["max_slots"],
+                                 prefill_chunk=schedule["prefill_chunk"])
+            replay(engine, trace)
+            if i == 0:      # unmeasured warmup: XLA compiles stay out
+                continue
+            runs.append(engine.stats()["throughput_tok_s"])
+        return statistics.median(runs), runs
+
+    thr_default, runs_default = measure(dict(DEFAULT_ENGINE_SCHEDULE))
+    thr_live, runs_live = measure(dict(live.genome))
+    ratio = round(thr_live / max(thr_default, 1e-9), 3)
+    print(f"[liveloop_ab] default {thr_default:.1f} tok/s vs promoted "
+          f"{thr_live:.1f} tok/s -> {ratio}x")
+
+    # -- rollback arm: fault-injected modeled loop --------------------------
+    def fault(genome, metrics):
+        m = dict(metrics)
+        m["throughput_tok_s"] = round(m["throughput_tok_s"] / 3.0, 6)
+        m["mean_ttft_s"] = round(m["mean_ttft_s"] * 3.0, 6)
+        m["mean_latency_s"] = round(m["mean_latency_s"] * 3.0, 6)
+        return m
+
+    root_rb = tempfile.mkdtemp(prefix="liveloop_ab_rb_")
+    ctl_rb = LiveLoopController(root_rb, trace=trace, arch=arch,
+                                mode="modeled", gens_per_tick=1, pop=6,
+                                seed=seed, fraction=0.5,
+                                guardrails=Guardrails(windows=2),
+                                fault_hook=fault)
+    rb_summaries = ctl_rb.run(ticks + 1)
+    rb_outcomes = [s["outcome"] for s in rb_summaries]
+    blocked = ctl_rb.book.status()["blocked"]
+    print(f"[liveloop_ab] rollback arm outcomes: {rb_outcomes}, "
+          f"blocked={[(b[:12] + '…') for b in blocked]}")
+
+    out = {
+        "arch": arch, "trace": trace.summary(), "ticks": ticks,
+        "loop_wall_s": round(wall_loop, 2),
+        "promote": {
+            "summaries": summaries,
+            "promoted_genome": promoted["genome"],
+            "canary_ratios": promoted["ratios"],
+            "default_tok_s": {"median": thr_default, "runs": runs_default},
+            "promoted_tok_s": {"median": thr_live, "runs": runs_live},
+            "throughput_ratio_promoted_vs_default": ratio,
+        },
+        "rollback": {
+            "outcomes": rb_outcomes,
+            "blocked": blocked,
+            "re_proposed_after_rollback": (
+                "rolled_back" in rb_outcomes and any(
+                    s["proposed"] for s in
+                    rb_summaries[rb_outcomes.index("rolled_back") + 1:])),
+        },
+        "serve_cache_records": sum(
+            1 for line in open(os.path.join(root, "cache.jsonl"))
+            if json.loads(line).get("writer") == "serve"),
+    }
+    # acceptance bars: the loop promotes a genome that measures no worse
+    # than the default artifact; the fault-injected run is rolled back and
+    # its fingerprint is never re-canaried
+    assert ratio >= 1.0, \
+        (f"promoted serve genome lost to the default schedule "
+         f"({thr_live:.1f} vs {thr_default:.1f} tok/s)")
+    assert "rolled_back" in rb_outcomes, \
+        f"fault-injected run was not rolled back: {rb_outcomes}"
+    assert len(blocked) >= 1, "rollback did not block the fingerprint"
+    assert not out["rollback"]["re_proposed_after_rollback"], \
+        "a rolled-back fingerprint was re-proposed"
+    assert out["serve_cache_records"] >= 2, \
+        "the loop published no serve-tagged records"
+    os.makedirs(OUT, exist_ok=True)
+    path = os.path.join(OUT, "liveloop_ab.json")
+    json.dump(out, open(path, "w"), indent=1)
+    print(f"[liveloop_ab] wrote {path}; promoted/default throughput="
+          f"{ratio}x, rollback arm blocked "
+          f"{len(blocked)} fingerprint(s)")
+    return out
+
+
 def run_cells():
     os.makedirs(OUT, exist_ok=True)
 
@@ -947,7 +1138,7 @@ def main():
     ap.add_argument("--suite",
                     choices=("cells", "evaluator", "operators", "kernels",
                              "islands", "serving", "tensor_evo", "analysis",
-                             "surrogate", "all"),
+                             "surrogate", "liveloop", "all"),
                     default="cells")
     ap.add_argument("--workers", type=int, default=2,
                     help="ParallelEvaluator workers for --suite evaluator")
@@ -971,6 +1162,8 @@ def main():
         analysis_ab(generations=max(args.generations, 12))
     if args.suite in ("surrogate", "all"):
         surrogate_ab(generations=max(args.generations, 10))
+    if args.suite in ("liveloop", "all"):
+        liveloop_ab()
 
 
 if __name__ == "__main__":

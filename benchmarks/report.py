@@ -177,7 +177,20 @@ def suite_headlines(d: str = PERF_DIR) -> None:
               f"executed evaluations, equal genome budget (kept "
               f"{st['kept']}/{st['ranked']} ranked offspring over "
               f"{st['refits']} refits) |")
-    if not any((ev, op, kn, isl, sv, tv, an, sur)):
+    ll = load("liveloop_ab.json")
+    if ll:
+        g = ll["promote"]["promoted_genome"]
+        rb = ll["rollback"]
+        print(f"| liveloop | live loop promoted "
+              f"(max_slots={g['max_slots']}, "
+              f"prefill_chunk={g['prefill_chunk']}) = "
+              f"{ll['promote']['throughput_ratio_promoted_vs_default']}x "
+              f"throughput vs the default schedule "
+              f"({ll['promote']['promoted_tok_s']['median']:.0f} vs "
+              f"{ll['promote']['default_tok_s']['median']:.0f} tok/s, "
+              f"{ll['ticks']} ticks); fault-injected arm rolled back and "
+              f"blocked {len(rb['blocked'])} fingerprint(s) |")
+    if not any((ev, op, kn, isl, sv, tv, an, sur, ll)):
         print(f"| (none) | no *_ab.json suite records under {d} |")
 
 

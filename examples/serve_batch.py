@@ -36,8 +36,9 @@ def main():
     args = ap.parse_args()
 
     from repro.configs import smoke_config
-    from repro.core.deploy import (ArtifactRegistry, ServeEngine, demo_trace,
+    from repro.core.deploy import (ArtifactRegistry, ServeEngine,
                                    engine_schedule_from, oneshot_generate)
+    from repro.core.liveloop.traces import demo_requests
 
     registry = ArtifactRegistry(args.artifacts) if args.artifacts else None
     for arch in (args.arch or DEFAULT_ARCHS):
@@ -51,8 +52,8 @@ def main():
         engine = ServeEngine(cfg, max_len=args.prompt_len + args.gen,
                              max_slots=schedule["max_slots"],
                              prefill_chunk=schedule["prefill_chunk"])
-        trace = demo_trace(cfg, n_requests=args.requests,
-                           prompt_len=args.prompt_len, gen=args.gen)
+        trace = demo_requests(cfg, n_requests=args.requests,
+                              prompt_len=args.prompt_len, gen=args.gen)
         results = engine.run(trace, stagger=args.stagger or None)
         s = engine.stats()
         rec = s["per_variant"]["default"]

@@ -41,6 +41,7 @@ from __future__ import annotations
 import hashlib
 import json
 import time as _time
+import warnings
 from collections import deque
 from dataclasses import dataclass, field
 from functools import lru_cache
@@ -244,6 +245,7 @@ class ServeEngine:
         self.queue: deque[ServeRequest] = deque()
         self.batches = {v: _LaneBatch(max_slots) for v in self.cfgs}
         self.completed: list[ServeResult] = []
+        self.n_rejected = 0
         self._t0: float | None = None
         self._t_last: float = 0.0
         self.n_ticks = 0
@@ -264,6 +266,18 @@ class ServeEngine:
         req.tokens = tokens
         req._t_submit = _time.perf_counter()
         self.queue.append(req)
+
+    def try_submit(self, req: ServeRequest) -> bool:
+        """Admission-or-reject: like :meth:`submit` but malformed requests
+        (over-budget prompt, unknown variant) are *counted*, not raised — a
+        live replay loop must survive bad traffic.  Returns whether the
+        request was accepted."""
+        try:
+            self.submit(req)
+        except ValueError:
+            self.n_rejected += 1
+            return False
+        return True
 
     def submit_many(self, reqs) -> None:
         for r in reqs:
@@ -440,9 +454,19 @@ class ServeEngine:
 
     # -- stats + feedback ----------------------------------------------------
     def stats(self) -> dict:
-        """Aggregate measured serving stats, overall and per variant."""
-        wall = (self._t_last - self._t0) if self._t0 else 0.0
+        """Aggregate measured serving stats, overall and per variant.
+        Total on every path the live loop hits: before the first tick,
+        mid-run before any completion, and after all-rejected admissions
+        the numbers are well-defined zeros, never negative and never a
+        raise.  Variants that completed nothing still get a zeroed row (so
+        canary guardrails can read ``per_variant["evolved"]["n"] == 0``
+        instead of catching ``KeyError``)."""
+        # _t_last stays 0.0 until the first completion, so a mid-run read
+        # would see a negative span; clamp to "no completed work yet".
+        wall = max(self._t_last - self._t0, 0.0) \
+            if self._t0 is not None else 0.0
         out = {"n_completed": len(self.completed),
+               "n_rejected": self.n_rejected,
                "wall_s": round(wall, 6),
                "ticks": self.n_ticks,
                "prefill_batches": self.n_prefill_batches,
@@ -454,6 +478,10 @@ class ServeEngine:
         for variant in self.cfgs:
             rs = [r for r in self.completed if r.variant == variant]
             if not rs:
+                out["per_variant"][variant] = {
+                    "n": 0, "gen_tokens": 0, "mean_latency_s": 0.0,
+                    "p95_latency_s": 0.0, "mean_ttft_s": 0.0,
+                    "s_per_token": 0.0}
                 continue
             lat = np.array([r.latency for r in rs])
             toks = sum(len(r.tokens) for r in rs)
@@ -469,7 +497,8 @@ class ServeEngine:
         return out
 
     def publish_stats(self, cache: FitnessCache, *, name: str, shape,
-                      run: str = "") -> list[str]:
+                      run: str = "", features=None,
+                      meta: dict | None = None) -> list[str]:
         """Feed measured per-variant serving fitness back into a shared
         :class:`FitnessCache` as ``serve``-tagged records (fitness =
         ``(s_per_token, mean_latency_s)``).  The key is a content hash of
@@ -480,11 +509,20 @@ class ServeEngine:
         to record repeated measurements of the same configuration.
         Returns the keys of records actually added (empty if everything
         was already recorded).  Searches warm-starting from the same store
-        see what deployment measured."""
+        see what deployment measured.
+
+        ``features`` (a numeric vector, e.g. ``ScheduleFeaturizer.
+        of_genome(schedule)``) makes the records *surrogate training
+        rows*; ``meta`` (e.g. a :meth:`~repro.core.liveloop.traces.Trace.
+        spec`) rides along on the record so live traffic can later be
+        re-synthesized from the store.  Variants that completed nothing
+        are skipped — a zero measurement is not a measurement."""
         if cache.writer is None:
             cache.writer = "serve"
         added = []
         for variant, rec in self.stats()["per_variant"].items():
+            if rec["n"] == 0:
+                continue
             body = {"kind": "serve_latency", "name": name,
                     "shape": shape_tag(shape), "variant": variant,
                     "schedule": {"max_slots": self.max_slots,
@@ -495,7 +533,8 @@ class ServeEngine:
             if key in cache:
                 continue
             cache.put(key, EvalOutcome(
-                fitness=(rec["s_per_token"], rec["mean_latency_s"])))
+                fitness=(rec["s_per_token"], rec["mean_latency_s"])),
+                features=features, meta=meta)
             added.append(key)
         return added
 
@@ -529,18 +568,18 @@ def oneshot_generate(cfg, params, prompts: np.ndarray, gen: int,
 
 def demo_trace(cfg, *, n_requests: int, prompt_len: int, gen: int,
                seed: int = 0) -> list[ServeRequest]:
-    """A deterministic mixed-length request trace (prompt lengths alternate
-    ``prompt_len`` and ``prompt_len // 2``), shared by the CLI demo, the
-    serving A/B suite, and the serving-schedule search."""
-    rng = np.random.default_rng(seed)
-    reqs = []
-    for i in range(n_requests):
-        plen = prompt_len if i % 2 == 0 else max(prompt_len // 2, 1)
-        reqs.append(ServeRequest(
-            uid=f"req{i:03d}",
-            tokens=rng.integers(0, cfg.vocab, plen).astype(np.int32),
-            max_new_tokens=gen))
-    return reqs
+    """Deprecated: trace synthesis moved to ``repro.core.liveloop.traces``
+    (:func:`~repro.core.liveloop.traces.demo_requests` is this function;
+    :func:`~repro.core.liveloop.traces.synthesize` builds the richer
+    scenario shapes).  This shim emits the same request list byte-for-byte
+    and will be removed."""
+    warnings.warn(
+        "repro.core.deploy.demo_trace is deprecated; use "
+        "repro.core.liveloop.traces.demo_requests (or synthesize) instead",
+        DeprecationWarning, stacklevel=2)
+    from ..liveloop.traces import demo_requests
+    return demo_requests(cfg, n_requests=n_requests, prompt_len=prompt_len,
+                         gen=gen, seed=seed)
 
 
 def build_serve_workload(arch: str = "qwen3-0.6b", *, smoke: bool = True,
@@ -563,11 +602,12 @@ def build_serve_workload(arch: str = "qwen3-0.6b", *, smoke: bool = True,
     max_len = prompt_len + gen
 
     def runner(genome: dict) -> tuple[float, float]:
+        from ..liveloop.traces import demo_requests
         engine = ServeEngine(cfg, params, max_len=max_len,
                              max_slots=genome["max_slots"],
                              prefill_chunk=genome["prefill_chunk"])
-        engine.run(demo_trace(cfg, n_requests=n_requests,
-                              prompt_len=prompt_len, gen=gen, seed=seed),
+        engine.run(demo_requests(cfg, n_requests=n_requests,
+                                 prompt_len=prompt_len, gen=gen, seed=seed),
                    stagger=stagger)
         s = engine.stats()
         per = s["per_variant"]["default"]

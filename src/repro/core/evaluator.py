@@ -129,6 +129,7 @@ class FitnessCache:
         self._mem: dict[str, EvalOutcome] = {}
         self._writers: dict[str, str] = {}   # key -> author tag (if tagged)
         self._features: dict[str, list[float]] = {}  # key -> feature vector
+        self._meta: dict[str, dict] = {}   # key -> free-form metadata doc
         self.hits = 0
         self.misses = 0
         self.cross_hits = 0   # distinct entries another writer authored
@@ -170,6 +171,8 @@ class FitnessCache:
                     if rec.get("features") is not None:
                         self._features[key] = [float(x)
                                                for x in rec["features"]]
+                    if isinstance(rec.get("meta"), dict):
+                        self._meta[key] = rec["meta"]
                     added += 1
         return added
 
@@ -199,13 +202,17 @@ class FitnessCache:
 
     def put(self, key: str, outcome: EvalOutcome, *,
             writer: str | None = None,
-            features: list[float] | None = None) -> None:
+            features: list[float] | None = None,
+            meta: dict | None = None) -> None:
         """Record an outcome.  ``writer`` overrides this cache's author tag
         for the one record (the evaluator tags statically screened verdicts
         ``analysis:<writer>`` so cache files show what was never executed).
         ``features`` attaches the patch's surrogate feature vector to the
-        record.  ``transient`` outcomes stay in-memory only — this run will
-        not retry them, but no future run inherits the failure."""
+        record; ``meta`` attaches a free-form JSON doc (e.g. the trace spec
+        a serve measurement was taken under — see
+        :mod:`repro.core.liveloop.traces`).  ``transient`` outcomes stay
+        in-memory only — this run will not retry them, but no future run
+        inherits the failure."""
         if key in self._mem:
             return
         author = writer if writer is not None else self.writer
@@ -215,6 +222,8 @@ class FitnessCache:
             self._writers[key] = author
         if features is not None:
             self._features[key] = [float(x) for x in features]
+        if meta is not None:
+            self._meta[key] = dict(meta)
         if self._fd is not None and not outcome.transient \
                 and (outcome.ok or self.persist_invalid):
             rec = {"key": key}
@@ -223,10 +232,15 @@ class FitnessCache:
                 rec["writer"] = author
             if features is not None:
                 rec["features"] = [float(x) for x in features]
+            if meta is not None:
+                rec["meta"] = dict(meta)
             self._append_line(json.dumps(rec) + "\n")
 
     def features_of(self, key: str) -> list[float] | None:
         return self._features.get(key)
+
+    def meta_of(self, key: str) -> dict | None:
+        return self._meta.get(key)
 
     def training_rows(self) -> list[tuple[str, list[float], EvalOutcome]]:
         """Every feature-bearing record as a ``(key, features, outcome)``

@@ -1,0 +1,36 @@
+"""repro.core.liveloop — continuous evolution under replayed traffic.
+
+The subsystem that closes evolve→serve→measure→promote as one control
+loop (ROADMAP open item 4, GEVO's re-validate-winners-in-the-target-
+application methodology made operational):
+
+* :mod:`~repro.core.liveloop.traces` — seeded workload-scenario synthesis
+  (bursty/long-tail/mixed/ramp/spike arrival shapes), trace replay through
+  the serve engine, and re-synthesis of traces from serve-tagged
+  FitnessCache records;
+* :mod:`~repro.core.liveloop.canary` — the journaled promotion state
+  machine (candidate→canary→promoted | rolled_back) with deterministic
+  traffic splits and pure-function guardrail verdicts;
+* :mod:`~repro.core.liveloop.controller` — the background evolution loop:
+  a GevoML island over the serve schedule space with the live surrogate,
+  candidate export through the ArtifactRegistry, canary windows, and
+  journal/registry reconciliation, all kill-anywhere resumable;
+* ``python -m repro.core.liveloop`` — the operator CLI (``synth``,
+  ``run``, ``status``, ``promote``, ``rollback``).
+"""
+
+from .canary import (CANARY, CANDIDATE, PROMOTED, ROLLED_BACK, CanaryBook,
+                     Guardrails, split_indices, verdict_of)
+from .controller import LiveLoopController, genome_fingerprint, simulate
+from .traces import (SCENARIOS, ReplayReport, TimedRequest, Trace,
+                     demo_requests, replay, synthesize, trace_from_records,
+                     trace_from_spec)
+
+__all__ = [
+    "CANARY", "CANDIDATE", "PROMOTED", "ROLLED_BACK",
+    "CanaryBook", "Guardrails", "split_indices", "verdict_of",
+    "LiveLoopController", "genome_fingerprint", "simulate",
+    "SCENARIOS", "ReplayReport", "TimedRequest", "Trace",
+    "demo_requests", "replay", "synthesize", "trace_from_records",
+    "trace_from_spec",
+]

@@ -157,7 +157,8 @@ class GevoML:
                  cache_path: str | None = None,
                  checkpoint_dir: str | None = None,
                  engine: str = "python", screen: bool = False,
-                 surrogate: bool = False, surrogate_keep: float = 0.5):
+                 surrogate: bool = False, surrogate_keep: float = 0.5,
+                 surrogate_live: bool = False):
         if engine not in self.ENGINES:
             raise ValueError(f"unknown engine {engine!r}; "
                              f"choose from {self.ENGINES}")
@@ -197,8 +198,12 @@ class GevoML:
             # that slice is executed.  Runs AFTER the cache lookup and the
             # static screen — the model prioritizes among unknowns, it never
             # overrides an exact verdict.
+            # surrogate_live makes the guide reload the cache before every
+            # refit, folding in rows other writers (the live-loop serving
+            # fleet) appended since the last read
             from .surrogate import SurrogateGuide
-            self.guide = SurrogateGuide(workload, keep=surrogate_keep)
+            self.guide = SurrogateGuide(workload, keep=surrogate_keep,
+                                        live=surrogate_live)
             if getattr(self.evaluator, "featurizer", None) is None:
                 # record features on every measured outcome so the cache
                 # this search writes is itself surrogate training data

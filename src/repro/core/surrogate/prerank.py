@@ -34,9 +34,10 @@ class SurrogateGuide:
     untrained and every candidate passes."""
 
     def __init__(self, workload, *, keep: float = 0.5, l2: float = 1e-3,
-                 min_fit: int = 8):
+                 min_fit: int = 8, live: bool = False):
         if not 0.0 < keep <= 1.0:
             raise ValueError(f"surrogate keep must be in (0, 1], got {keep}")
+        self.live = bool(live)
         self.featurizer = make_featurizer(workload)
         if self.featurizer is None:
             raise ValueError(
@@ -53,7 +54,13 @@ class SurrogateGuide:
 
     def refit(self, cache) -> bool:
         """Refit from the cache's measured rows; False (and keep the previous
-        fit, if any) when there is too little data."""
+        fit, if any) when there is too little data.  A ``live`` guide first
+        absorbs records other writers appended since the last read — the
+        live-loop serving fleet publishes feature-bearing latency rows into
+        the same store, and ``reload()`` is what folds them into the next
+        fit (the online-refit half of the evolve→serve→measure loop)."""
+        if self.live and hasattr(cache, "reload"):
+            cache.reload()
         _, X, Y = dataset_from_cache(cache)
         if len(X) < self.min_fit:
             return False

@@ -57,15 +57,23 @@ def main() -> None:
     ap.add_argument("--oneshot", action="store_true",
                     help="pre-engine one-shot path: batch prefill + "
                          "lockstep decode of --requests equal prompts")
+    ap.add_argument("--liveloop", default=None,
+                    help="live-loop root directory (see `python -m "
+                         "repro.core.liveloop`): serve with the loop's "
+                         "promoted schedule, optionally advancing the "
+                         "loop first")
+    ap.add_argument("--liveloop-ticks", type=int, default=0,
+                    help="control-loop ticks to run before serving")
     args = ap.parse_args()
 
     import numpy as np
 
     from ..configs import get_config, smoke_config
     from ..core.deploy import (ArtifactRegistry, ServeEngine,
-                               apply_plan_artifact, demo_trace,
-                               engine_schedule_from, oneshot_generate)
+                               apply_plan_artifact, engine_schedule_from,
+                               oneshot_generate)
     from ..core.evaluator import FitnessCache
+    from ..core.liveloop.traces import demo_requests
 
     cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
     if cfg.family == "encoder":
@@ -91,6 +99,22 @@ def main() -> None:
                                      else "full", kind="serve")
         plan_art = registry.resolve(cfg.name, args.plan_shape, kind="plan")
     schedule = engine_schedule_from(serve_art)
+    if args.liveloop:
+        # the loop's promoted schedule wins over the static registry: this
+        # is the serving end of evolve->serve->measure->promote
+        from ..core.liveloop import LiveLoopController
+        ctl = LiveLoopController(args.liveloop)
+        if args.liveloop_ticks:
+            ctl.run(args.liveloop_ticks)
+        live = ctl.registry.resolve(ctl.arch, "live", kind="serve")
+        if live is not None:
+            schedule.update({k: live.genome[k] for k in schedule
+                             if k in live.genome})
+            print(f"liveloop: serving promoted schedule {schedule} "
+                  f"(fingerprint {live.meta['genome_fingerprint'][:12]})")
+        else:
+            print("liveloop: nothing promoted yet; serving the default "
+                  "schedule")
     if args.max_slots is not None:
         schedule["max_slots"] = args.max_slots
     if args.prefill_chunk is not None:
@@ -111,8 +135,8 @@ def main() -> None:
                          prefill_chunk=schedule["prefill_chunk"],
                          evolved_cfg=evolved_cfg, ab_fraction=ab,
                          temperature=args.temperature)
-    trace = demo_trace(cfg, n_requests=args.requests,
-                       prompt_len=args.prompt_len, gen=args.gen)
+    trace = demo_requests(cfg, n_requests=args.requests,
+                          prompt_len=args.prompt_len, gen=args.gen)
     results = engine.run(trace, stagger=args.stagger or None)
 
     s = engine.stats()
@@ -123,6 +147,8 @@ def main() -> None:
     print(f"wall={s['wall_s']:.2f}s throughput={s['throughput_tok_s']:.1f} "
           f"tok/s")
     for variant, rec in s["per_variant"].items():
+        if rec["n"] == 0:
+            continue
         print(f"  [{variant}] n={rec['n']} "
               f"ttft={rec['mean_ttft_s'] * 1e3:.1f}ms "
               f"latency={rec['mean_latency_s'] * 1e3:.1f}ms "

@@ -1,0 +1,362 @@
+"""Live-loop subsystem coverage: trace synthesis determinism and
+round-trips, the canary state machine's pure pieces, the modeled
+controller's promote and rollback paths, and the two acceptance
+properties — kill-and-resume replays the journals and registry
+bit-exactly, and a rolled-back fingerprint is never re-promoted.
+
+Everything here runs in ``mode="modeled"`` (the deterministic
+discrete-event engine model): no jax, no model params, fast enough for
+the tier-1 gate."""
+
+import json
+import os
+import shutil
+
+import pytest
+
+from repro.core.evaluator import FitnessCache
+from repro.core.liveloop import (CANARY, PROMOTED, ROLLED_BACK, CanaryBook,
+                                 Guardrails, LiveLoopController, Trace,
+                                 genome_fingerprint, simulate, split_indices,
+                                 synthesize, trace_from_records,
+                                 trace_from_spec, verdict_of)
+from repro.core.liveloop.traces import SCENARIOS, replay
+
+
+# --------------------------------------------------------------------------
+# traces
+# --------------------------------------------------------------------------
+
+
+class TestTraces:
+    @pytest.mark.parametrize("scenario", SCENARIOS)
+    def test_synthesis_deterministic(self, scenario):
+        a = synthesize(scenario, vocab=64, n_requests=8, max_prompt=8,
+                       gen=4, seed=3)
+        b = synthesize(scenario, vocab=64, n_requests=8, max_prompt=8,
+                       gen=4, seed=3)
+        assert a.fingerprint() == b.fingerprint()
+        assert [it.prompt_len for it in a.items] == \
+            [it.prompt_len for it in b.items]
+        assert a.tokens_for(a.items[0]).tolist() == \
+            b.tokens_for(b.items[0]).tolist()
+
+    def test_seed_changes_fingerprint(self):
+        a = synthesize("bursty", vocab=64, n_requests=8, seed=0)
+        b = synthesize("bursty", vocab=64, n_requests=8, seed=1)
+        assert a.fingerprint() != b.fingerprint()
+
+    def test_doc_round_trip_verifies_fingerprint(self, tmp_path):
+        tr = synthesize("mixed", vocab=64, n_requests=6, seed=2)
+        path = str(tmp_path / "t.json")
+        tr.save(path)
+        back = Trace.load(path)
+        assert back.fingerprint() == tr.fingerprint()
+        # a tampered body must be rejected, not silently accepted
+        doc = json.load(open(path))
+        doc["items"][0][2] += 1      # rows are [at_tick, index, plen, gen]
+        with pytest.raises(ValueError, match="fingerprint"):
+            Trace.from_doc(doc)
+
+    def test_trace_from_spec_resynthesizes(self):
+        tr = synthesize("long_tail", vocab=64, n_requests=8, seed=5)
+        back = trace_from_spec(tr.spec())
+        assert back.fingerprint() == tr.fingerprint()
+
+    def test_requests_match_items(self):
+        tr = synthesize("spike", vocab=64, n_requests=5, seed=0)
+        reqs = tr.requests()
+        assert len(reqs) == len(tr.items)
+        for it, rq in zip(tr.items, reqs):
+            assert len(rq.tokens) == it.prompt_len
+            assert rq.max_new_tokens == it.max_new_tokens
+
+
+class TestSimulate:
+    def test_deterministic_and_schedule_sensitive(self):
+        tr = synthesize("bursty", vocab=64, n_requests=12, max_prompt=12,
+                        gen=6, seed=0)
+        small = simulate(tr, {"max_slots": 2, "prefill_chunk": 1})
+        again = simulate(tr, {"max_slots": 2, "prefill_chunk": 1})
+        big = simulate(tr, {"max_slots": 8, "prefill_chunk": 4})
+        assert small == again
+        assert big["throughput_tok_s"] > small["throughput_tok_s"]
+        assert small["n"] == len(tr)
+        assert small["gen_tokens"] == sum(it.max_new_tokens
+                                          for it in tr.items)
+
+    def test_slow_scales_wall(self):
+        tr = synthesize("steady", vocab=64, n_requests=4, seed=0)
+        g = {"max_slots": 2, "prefill_chunk": 1}
+        assert simulate(tr, g, slow=2.0)["wall_s"] == \
+            pytest.approx(2.0 * simulate(tr, g)["wall_s"], rel=1e-6)
+
+
+# --------------------------------------------------------------------------
+# canary: the pure pieces
+# --------------------------------------------------------------------------
+
+
+class TestCanaryPure:
+    def test_split_deterministic_and_partitions(self):
+        idx = split_indices(20, 0.25, salt="s")
+        assert idx == split_indices(20, 0.25, salt="s")
+        assert idx != split_indices(20, 0.25, salt="other")
+        assert all(0 <= i < 20 for i in idx)
+
+    def test_verdict_waits_for_windows(self):
+        rails = Guardrails(windows=2)
+        good = {"throughput_tok_s": 10.0, "mean_ttft_s": 1.0,
+                "reject_rate": 0.0}
+        v = verdict_of([{"baseline": good, "canary": good}], rails)
+        assert not v["decided"]
+        v = verdict_of([{"baseline": good, "canary": good}] * 2, rails)
+        assert v["decided"] and v["promote"]
+
+    def test_verdict_rolls_back_on_throughput(self):
+        rails = Guardrails(windows=1)
+        base = {"throughput_tok_s": 10.0, "mean_ttft_s": 1.0,
+                "reject_rate": 0.0}
+        slow = dict(base, throughput_tok_s=5.0)
+        v = verdict_of([{"baseline": base, "canary": slow}], rails)
+        assert v["decided"] and not v["promote"]
+        assert not v["checks"]["throughput"]
+
+
+# --------------------------------------------------------------------------
+# the modeled controller
+# --------------------------------------------------------------------------
+
+
+def _mk(root, **kw):
+    tr = kw.pop("trace", None) or synthesize(
+        "bursty", vocab=64, n_requests=12, max_prompt=12, gen=6, seed=0)
+    kw.setdefault("gens_per_tick", 2)
+    kw.setdefault("pop", 8)
+    kw.setdefault("fraction", 0.5)
+    kw.setdefault("guardrails", Guardrails(windows=2))
+    return LiveLoopController(str(root), trace=tr, mode="modeled", **kw)
+
+
+def _tree_bytes(root, names=("canary.json", "state.json")):
+    """Byte-exact snapshot of the journals and every registry file."""
+    out = {}
+    for name in names:
+        out[name] = open(os.path.join(root, name), "rb").read()
+    reg = os.path.join(root, "registry")
+    for dirpath, _, files in os.walk(reg):
+        for f in sorted(files):
+            p = os.path.join(dirpath, f)
+            out[os.path.relpath(p, root)] = open(p, "rb").read()
+    return out
+
+
+class TestControllerModeled:
+    def test_promote_path(self, tmp_path):
+        ctl = _mk(tmp_path / "loop")
+        summaries = ctl.run(3)
+        outcomes = [s["outcome"] for s in summaries]
+        assert PROMOTED in outcomes
+        inc = ctl.book.promoted
+        assert inc is not None
+        live = ctl.registry.resolve(ctl.arch, "live", kind="serve")
+        assert live is not None and live.genome == inc["genome"]
+        assert live.meta["genome_fingerprint"] == inc["fingerprint"]
+        # the promoted schedule really beats the default on this trace
+        base = simulate(ctl.trace, {"max_slots": 2, "prefill_chunk": 1})
+        best = simulate(ctl.trace, inc["genome"])
+        assert best["throughput_tok_s"] >= base["throughput_tok_s"]
+
+    def test_serve_records_published_with_features_and_meta(self, tmp_path):
+        ctl = _mk(tmp_path / "loop")
+        ctl.run(2)
+        recs = [json.loads(line)
+                for line in open(os.path.join(str(tmp_path / "loop"),
+                                              "cache.jsonl"))]
+        serve = [r for r in recs if r["writer"] == "serve"]
+        assert serve, "canary windows must land as serve-tagged records"
+        for r in serve:
+            assert r["features"], "serve records must carry genome features"
+            assert r["meta"]["role"] in ("baseline", "canary")
+            assert r["meta"]["trace"]["fingerprint"] == \
+                ctl.trace.fingerprint()
+
+    def test_trace_from_records_round_trip(self, tmp_path):
+        ctl = _mk(tmp_path / "loop")
+        ctl.run(2)
+        traces = trace_from_records(
+            os.path.join(str(tmp_path / "loop"), "cache.jsonl"))
+        assert ctl.trace.fingerprint() in traces
+        back = traces[ctl.trace.fingerprint()]
+        assert back.fingerprint() == ctl.trace.fingerprint()
+
+    def test_resume_binds_trace_arch_and_mode(self, tmp_path):
+        root = tmp_path / "loop"
+        ctl = _mk(root)
+        ctl.run(1)
+        # a different trace must be refused on resume
+        other = synthesize("steady", vocab=64, n_requests=4, seed=9)
+        with pytest.raises(ValueError, match="trace"):
+            LiveLoopController(str(root), trace=other)
+        # constructor defaults must not silently switch the journaled mode
+        back = LiveLoopController(str(root), mode="real")
+        assert back.mode == "modeled"
+
+    def test_surrogate_refits_from_live_records(self, tmp_path):
+        ctl = _mk(tmp_path / "loop", pop=6)
+        ctl.run(3)
+        stats = ctl.search.guide.stats()
+        assert stats["refits"] > 0
+
+
+class TestKillAndResume:
+    def test_resume_replays_bit_exactly(self, tmp_path):
+        """The acceptance property: run N ticks, then replay from a copy
+        killed at every earlier tick boundary — the journals and the
+        registry converge to identical bytes."""
+        ref_root = str(tmp_path / "ref")
+        tr = synthesize("bursty", vocab=64, n_requests=12, max_prompt=12,
+                        gen=6, seed=0)
+        ref = _mk(ref_root, trace=tr)
+        snapshots = []
+        for _ in range(4):
+            ref.tick()
+            snapshots.append(_tree_bytes(ref_root))
+        want = _tree_bytes(ref_root)
+
+        for kill_at in range(4):
+            # reconstruct the world as it was after tick `kill_at`...
+            root = str(tmp_path / f"kill{kill_at}")
+            shutil.copytree(ref_root, root)
+            state = json.load(open(os.path.join(root, "state.json")))
+            # ...by rolling the copied root back to that snapshot
+            for name, blob in snapshots[kill_at].items():
+                open(os.path.join(root, name), "wb").write(blob)
+            state = json.load(open(os.path.join(root, "state.json")))
+            resumed = _mk(root, trace=tr)
+            assert resumed.state["tick"] == kill_at + 1
+            resumed.run(4 - (kill_at + 1))
+            assert _tree_bytes(root) == want, \
+                f"resume from tick {kill_at} diverged"
+
+    def test_replayed_tick_is_idempotent(self, tmp_path):
+        """Killing mid-tick means the tick re-runs in full on resume;
+        re-running an already-committed tick's work must rewrite
+        identical bytes (every step idempotent or journal-pure)."""
+        root = str(tmp_path / "loop")
+        ctl = _mk(root)
+        ctl.run(3)
+        before = _tree_bytes(root)
+        # simulate the crash-replay: a fresh process re-measures and
+        # re-publishes the last committed window
+        ctl2 = _mk(root)
+        t = ctl2.state["tick"] - 1
+        base, can = ctl2._split(t)
+        inc = ctl2.book.promoted
+        if ctl2.book.active is not None:
+            g = ctl2.book.active["genome"]
+            ctl2.book.observe(tick=t,
+                              baseline=simulate(base, inc["genome"] if inc
+                                                else {"max_slots": 2,
+                                                      "prefill_chunk": 1}),
+                              canary=simulate(can, g))
+        ctl2._sync_promoted()
+        assert _tree_bytes(root) == before
+
+
+class TestRollback:
+    def _fault(self, genome, metrics):
+        m = dict(metrics)
+        m["throughput_tok_s"] = round(m["throughput_tok_s"] / 3.0, 6)
+        m["mean_ttft_s"] = round(m["mean_ttft_s"] * 3.0, 6)
+        return m
+
+    def test_regression_rolls_back_blocks_and_never_reproposes(
+            self, tmp_path):
+        ctl = _mk(tmp_path / "loop", fault_hook=self._fault)
+        summaries = ctl.run(5)
+        outcomes = [s["outcome"] for s in summaries]
+        assert ROLLED_BACK in outcomes
+        assert ctl.book.promoted is None
+        blocked = set(ctl.book.status()["blocked"])
+        assert blocked
+        # after the rollback, the blocked fingerprint is never proposed
+        # again -- not this process, and not a resumed one
+        first_rb = outcomes.index(ROLLED_BACK)
+        for s in summaries[first_rb + 1:]:
+            if s["proposed"]:
+                assert genome_fingerprint(s["candidate"]) not in blocked
+        resumed = _mk(tmp_path / "loop", fault_hook=self._fault)
+        for s in resumed.run(2):
+            if s["proposed"]:
+                assert genome_fingerprint(s["candidate"]) not in blocked
+
+    def test_block_survives_in_journal(self, tmp_path):
+        ctl = _mk(tmp_path / "loop", fault_hook=self._fault)
+        ctl.run(3)
+        doc = json.load(open(os.path.join(str(tmp_path / "loop"),
+                                          "canary.json")))
+        assert doc["blocked"] == ctl.book.status()["blocked"]
+        assert any(ev["event"] == "rollback" for ev in doc["history"])
+
+
+class TestCanaryBookJournal:
+    def test_observe_is_tick_keyed(self, tmp_path):
+        book = CanaryBook(str(tmp_path / "c.json"),
+                          guardrails=Guardrails(windows=3))
+        g = {"max_slots": 4, "prefill_chunk": 2}
+        book.propose(genome_fingerprint(g), g, tick=0)
+        m = {"throughput_tok_s": 1.0, "mean_ttft_s": 1.0, "reject_rate": 0.0}
+        book.observe(tick=0, baseline=m, canary=m)
+        before = open(str(tmp_path / "c.json"), "rb").read()
+        book.observe(tick=0, baseline=m, canary=m)   # replayed tick: no-op
+        assert open(str(tmp_path / "c.json"), "rb").read() == before
+        assert len(book.active["windows"]) == 1
+        assert book.active["state"] == CANARY
+
+    def test_force_promote_and_rollback(self, tmp_path):
+        book = CanaryBook(str(tmp_path / "c.json"))
+        g = {"max_slots": 8, "prefill_chunk": 4}
+        fp = genome_fingerprint(g)
+        book.propose(fp, g, tick=0)
+        assert book.force_promote(tick=1) == PROMOTED
+        assert book.promoted["fingerprint"] == fp
+        assert book.force_rollback(tick=2) == ROLLED_BACK
+        assert book.promoted is None and fp in book.status()["blocked"]
+        # blocked means propose refuses it forever
+        assert not book.propose(fp, g, tick=3)
+
+
+# --------------------------------------------------------------------------
+# CLI
+# --------------------------------------------------------------------------
+
+
+class TestCLI:
+    def test_synth_run_status_promote(self, tmp_path, capsys):
+        from repro.core.liveloop.__main__ import main
+        trace_path = str(tmp_path / "trace.json")
+        assert main(["synth", "--scenario", "bursty", "--n-requests", "8",
+                     "--vocab", "64", "--out", trace_path]) == 0
+        root = str(tmp_path / "loop")
+        assert main(["run", "--root", root, "--trace", trace_path,
+                     "--ticks", "2", "--pop", "6"]) == 0
+        assert os.path.exists(os.path.join(root, "canary.json"))
+        capsys.readouterr()          # drop synth/run output
+        assert main(["status", "--root", root]) == 0
+        out = json.loads(capsys.readouterr().out)
+        assert out["tick"] == 2
+
+    def test_rollback_blocks_from_cli(self, tmp_path, capsys):
+        from repro.core.liveloop.__main__ import main
+        root = str(tmp_path / "loop")
+        ctl = _mk(root, guardrails=Guardrails(windows=10))
+        ctl.run(1)     # leaves a canary in flight (10 windows needed)
+        assert ctl.book.active is not None
+        assert main(["rollback", "--root", root]) == 0
+        book = CanaryBook(os.path.join(root, "canary.json"))
+        assert book.active is None and book.status()["blocked"]
+
+    def test_status_on_missing_root(self, tmp_path, capsys):
+        from repro.core.liveloop.__main__ import main
+        assert main(["status", "--root", str(tmp_path / "nope")]) == 1

@@ -10,9 +10,10 @@ import pytest
 
 from repro.configs import smoke_config
 from repro.core.deploy import (Artifact, ArtifactRegistry, ServeEngine,
-                               ServeRequest, demo_trace, oneshot_generate,
+                               ServeRequest, oneshot_generate,
                                serve_schedule_space)
 from repro.core.evaluator import FitnessCache
+from repro.core.liveloop.traces import demo_requests
 from repro.models.transformer import init_params
 
 
@@ -184,7 +185,7 @@ class TestServeFeedback:
         cfg, params = qwen
         eng = ServeEngine(cfg, params, max_len=12, max_slots=2,
                           prefill_chunk=1)
-        eng.run(demo_trace(cfg, n_requests=3, prompt_len=8, gen=3),
+        eng.run(demo_requests(cfg, n_requests=3, prompt_len=8, gen=3),
                 stagger=1)
         path = str(tmp_path / "cache.jsonl")
         cache = FitnessCache(path, writer="serve")
@@ -209,7 +210,7 @@ class TestServeFeedback:
     def test_publish_dedupes_and_keys_on_schedule(self, qwen, tmp_path):
         cfg, params = qwen
         eng = ServeEngine(cfg, params, max_len=12)
-        eng.run(demo_trace(cfg, n_requests=2, prompt_len=6, gen=2))
+        eng.run(demo_requests(cfg, n_requests=2, prompt_len=6, gen=2))
         path = str(tmp_path / "cache.jsonl")
         cache = FitnessCache(path, writer="serve")
         k1 = eng.publish_stats(cache, name=cfg.name, shape="s", run="r1")
@@ -220,7 +221,7 @@ class TestServeFeedback:
         # a different engine schedule must never collide with k1's key
         eng2 = ServeEngine(cfg, params, max_len=12, max_slots=8,
                            prefill_chunk=4)
-        eng2.run(demo_trace(cfg, n_requests=2, prompt_len=6, gen=2))
+        eng2.run(demo_requests(cfg, n_requests=2, prompt_len=6, gen=2))
         k4 = eng2.publish_stats(cache, name=cfg.name, shape="s", run="r1")
         cache.close()
         assert k1 and k2 == [] and k3 and k4
@@ -248,7 +249,104 @@ class TestServeSearchSurface:
         eng = ServeEngine(cfg, params, max_len=12,
                           max_slots=sched["max_slots"],
                           prefill_chunk=sched["prefill_chunk"])
-        out = eng.run(demo_trace(cfg, n_requests=4, prompt_len=8, gen=3),
+        out = eng.run(demo_requests(cfg, n_requests=4, prompt_len=8, gen=3),
                       stagger=2)
         assert len(out) == 4
         assert eng.max_slots == 4
+
+
+class TestStatsHardening:
+    """stats()/publish_stats() on the degenerate paths the live loop hits:
+    fresh engines, mid-run reads, all-rejected admissions, zero-completion
+    variants."""
+
+    def test_fresh_engine_stats_are_zeros(self, qwen):
+        cfg, params = qwen
+        eng = ServeEngine(cfg, params, max_len=12)
+        s = eng.stats()
+        assert s["wall_s"] == 0.0 and s["throughput_tok_s"] == 0.0
+        assert s["n_completed"] == 0 and s["n_rejected"] == 0
+        assert s["per_variant"]["default"]["n"] == 0
+
+    def test_midrun_stats_never_negative(self, qwen):
+        """Regression: a stats() read after the first tick but before any
+        completion used to compute wall from _t_last=0.0, going negative."""
+        cfg, params = qwen
+        eng = ServeEngine(cfg, params, max_len=12, max_slots=2,
+                          prefill_chunk=1)
+        for r in demo_requests(cfg, n_requests=2, prompt_len=6, gen=4):
+            eng.submit(r)
+        eng.step()          # admission happened, nothing completed yet
+        s = eng.stats()
+        assert s["wall_s"] >= 0.0
+        assert s["throughput_tok_s"] == 0.0 and s["n_completed"] == 0
+
+    def test_try_submit_counts_rejections(self, qwen):
+        cfg, params = qwen
+        eng = ServeEngine(cfg, params, max_len=8)
+        ok = eng.try_submit(ServeRequest(
+            uid="ok", tokens=np.zeros(2, np.int32), max_new_tokens=2))
+        big = eng.try_submit(ServeRequest(
+            uid="big", tokens=np.zeros(8, np.int32), max_new_tokens=4))
+        bad_v = eng.try_submit(ServeRequest(
+            uid="v", tokens=np.zeros(2, np.int32), max_new_tokens=2,
+            variant="evolved"))
+        assert ok and not big and not bad_v
+        assert eng.n_rejected == 2
+        assert eng.stats()["n_rejected"] == 2
+
+    def test_publish_skips_empty_variants(self, qwen, tmp_path):
+        """A variant that completed nothing is a zeroed stats row, not a
+        published 'measurement' of zero latency."""
+        cfg, params = qwen
+        evolved = cfg.scaled(attn_impl="blockwise", attn_block=8)
+        eng = ServeEngine(cfg, params, max_len=12, evolved_cfg=evolved,
+                          ab_fraction=0.0)     # all traffic -> default
+        eng.run(demo_requests(cfg, n_requests=2, prompt_len=6, gen=2))
+        assert eng.stats()["per_variant"]["evolved"]["n"] == 0
+        cache = FitnessCache(str(tmp_path / "c.jsonl"), writer="serve")
+        keys = eng.publish_stats(cache, name=cfg.name, shape="s")
+        cache.close()
+        assert len(keys) == 1
+
+    def test_publish_nothing_when_idle(self, qwen, tmp_path):
+        cfg, params = qwen
+        eng = ServeEngine(cfg, params, max_len=12)
+        cache = FitnessCache(str(tmp_path / "c.jsonl"), writer="serve")
+        assert eng.publish_stats(cache, name=cfg.name, shape="s") == []
+        cache.close()
+
+    def test_publish_features_and_meta_round_trip(self, qwen, tmp_path):
+        """features make serve records surrogate training rows; meta (the
+        trace spec) must survive the write and a fresh reload."""
+        cfg, params = qwen
+        eng = ServeEngine(cfg, params, max_len=12)
+        eng.run(demo_requests(cfg, n_requests=2, prompt_len=6, gen=2))
+        path = str(tmp_path / "c.jsonl")
+        cache = FitnessCache(path, writer="serve")
+        spec = {"scenario": "demo", "seed": 0}
+        keys = eng.publish_stats(cache, name=cfg.name, shape="s",
+                                 features=[2.0, 1.0], meta={"trace": spec})
+        cache.close()
+        assert keys
+        reader = FitnessCache(path, writer="search")
+        assert reader.meta_of(keys[0]) == {"trace": spec}
+        reader.close()
+        rec = json.loads(open(path).readline())
+        assert rec["features"] == [2.0, 1.0]
+        assert rec["meta"] == {"trace": spec}
+
+
+class TestDemoTraceShim:
+    def test_deprecated_shim_matches_demo_requests(self, qwen):
+        """repro.core.deploy.demo_trace is a deprecation shim now: it must
+        warn, and return exactly what liveloop's demo_requests returns."""
+        from repro.core.deploy import demo_trace
+        cfg, _ = qwen
+        with pytest.warns(DeprecationWarning, match="demo_requests"):
+            old = demo_trace(cfg, n_requests=3, prompt_len=8, gen=3)
+        new = demo_requests(cfg, n_requests=3, prompt_len=8, gen=3)
+        assert [r.uid for r in old] == [r.uid for r in new]
+        for a, b in zip(old, new):
+            assert np.array_equal(a.tokens, b.tokens)
+            assert a.max_new_tokens == b.max_new_tokens
