@@ -953,8 +953,9 @@ def liveloop_ab(ticks: int = 3, seed: int = 0) -> dict:
     **Promote arm** (real engine): a :class:`LiveLoopController` in
     ``mode="real"`` evolves the serve schedule against a synthesized
     bursty trace replayed through actual :class:`ServeEngine` instances,
-    canaries the winner under a deterministic traffic split, and promotes
-    it through the journaled guardrails.  The promoted artifact is then
+    canaries the winner by shadow-replaying a deterministic trace slice
+    under both schedules, and promotes it through the journaled
+    guardrails.  The promoted artifact is then
     re-measured from scratch (median of 3 full-trace replays) against the
     default schedule — the bar is throughput >= 1.0x default.
 
@@ -979,8 +980,10 @@ def liveloop_ab(ticks: int = 3, seed: int = 0) -> dict:
     # -- promote arm: real measured loop ------------------------------------
     root = tempfile.mkdtemp(prefix="liveloop_ab_")
     # pop 10 over the 12-point schedule space all but enumerates it, and
-    # the canary gate tolerates 5% cross-slice measurement noise -- the
-    # hard >= 1.0x bar is the from-scratch re-measure below
+    # the canary gate tolerates 5% run-to-run measurement noise (both
+    # sides shadow-replay the same slice, so there is no cross-slice
+    # composition noise) -- the hard >= 1.0x bar is the from-scratch
+    # re-measure below
     ctl = LiveLoopController(root, trace=trace, arch=arch, mode="real",
                              gens_per_tick=2, pop=10, seed=seed,
                              fraction=0.5,
@@ -1039,6 +1042,16 @@ def liveloop_ab(ticks: int = 3, seed: int = 0) -> dict:
     blocked = ctl_rb.book.status()["blocked"]
     print(f"[liveloop_ab] rollback arm outcomes: {rb_outcomes}, "
           f"blocked={[(b[:12] + '…') for b in blocked]}")
+    # the blocklist invariant: once a fingerprint rolls back, it is never
+    # proposed again (fresh fingerprints may still be — each new genome
+    # gets its one canary before the fault hook sinks it)
+    rolled = set()
+    re_proposed = False
+    for ev in ctl_rb.book.doc["history"]:
+        if ev["event"] == "rollback":
+            rolled.add(ev["fingerprint"])
+        elif ev["event"] == "propose" and ev["fingerprint"] in rolled:
+            re_proposed = True
 
     out = {
         "arch": arch, "trace": trace.summary(), "ticks": ticks,
@@ -1054,10 +1067,7 @@ def liveloop_ab(ticks: int = 3, seed: int = 0) -> dict:
         "rollback": {
             "outcomes": rb_outcomes,
             "blocked": blocked,
-            "re_proposed_after_rollback": (
-                "rolled_back" in rb_outcomes and any(
-                    s["proposed"] for s in
-                    rb_summaries[rb_outcomes.index("rolled_back") + 1:])),
+            "re_proposed_after_rollback": re_proposed,
         },
         "serve_cache_records": sum(
             1 for line in open(os.path.join(root, "cache.jsonl"))

@@ -57,6 +57,11 @@ def _add_run(sub):
     p.add_argument("--fraction", type=float, default=0.5)
     p.add_argument("--windows", type=int, default=2,
                    help="measurement windows per canary verdict")
+    p.add_argument("--min-throughput-ratio", type=float, default=None,
+                   help="promotion floor on canary/baseline throughput "
+                        "(default: 1.0 for --mode modeled, whose shadow "
+                        "replays are deterministic; 0.95 for --mode real, "
+                        "leaving noise headroom)")
     p.add_argument("--no-surrogate", action="store_true")
     p.add_argument("--inject-regression", action="store_true",
                    help="fault drill: slow every canary measurement 3x "
@@ -86,11 +91,15 @@ def _controller(args) -> LiveLoopController:
             m["mean_ttft_s"] = round(m["mean_ttft_s"] * 3.0, 6)
             m["mean_latency_s"] = round(m["mean_latency_s"] * 3.0, 6)
             return m
+    ratio = args.min_throughput_ratio
+    if ratio is None:
+        ratio = 1.0 if args.mode == "modeled" else 0.95
     return LiveLoopController(
         args.root, trace=trace, arch=args.arch, mode=args.mode,
         gens_per_tick=args.gens_per_tick, pop=args.pop, seed=args.seed,
         fraction=args.fraction,
-        guardrails=Guardrails(windows=args.windows),
+        guardrails=Guardrails(windows=args.windows,
+                              min_throughput_ratio=ratio),
         fault_hook=fault, surrogate=not args.no_surrogate,
         verbose=args.verbose)
 

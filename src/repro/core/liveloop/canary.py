@@ -3,11 +3,12 @@ and "traffic runs on it".
 
 GEVO's methodology re-validates evolved winners *in the target
 application* before trusting them; in a serving fleet that re-validation
-is a **canary**: the candidate takes a configurable fraction of live
-traffic alongside the incumbent, both are measured under identical
-arrivals, and an explicit guardrail verdict — computed from the recorded
-measurements only, never from ambient state — either promotes the
-candidate or rolls it back.
+is a **canary**: a configurable fraction of the traffic is sliced off
+(:func:`split_indices`) and replayed under both the incumbent and the
+candidate — shadow replay, so both sides are measured under identical
+arrivals — and an explicit guardrail verdict — computed from the
+recorded measurements only, never from ambient state — either promotes
+the candidate or rolls it back.
 
 The lifecycle is ``candidate → canary → promoted | rolled_back``:
 
@@ -15,7 +16,7 @@ The lifecycle is ``candidate → canary → promoted | rolled_back``:
   that were ever rolled back — a regression is remembered forever, the
   same genome is never re-canaried);
 * :meth:`CanaryBook.observe` records one measurement window (baseline and
-  canary measured under the same arrivals).  Windows are keyed by tick and
+  canary shadow-replayed over the same slice).  Windows are keyed by tick and
   idempotent: re-observing a journaled tick is a no-op, which is what
   makes kill-and-resume replay bit-exact;
 * :meth:`CanaryBook.decide` applies :class:`Guardrails` — throughput
@@ -54,7 +55,12 @@ JOURNAL_VERSION = 1
 class Guardrails:
     """Promotion thresholds, applied to per-window canary/baseline ratios
     (window-mean).  Defaults are deliberately strict on throughput (a
-    canary must not be slower) and tolerant on TTFT jitter."""
+    canary must not be slower) and tolerant on TTFT jitter.  The strict
+    1.0 throughput floor assumes deterministic measurement (both sides
+    shadow-replay the same slice, so an identical candidate scores
+    exactly 1.0 under the modeled backend); for noisy real-engine
+    replays, leave headroom — the controller defaults ``mode="real"``
+    loops to 0.95, the same margin ``perf_ab`` uses."""
 
     min_throughput_ratio: float = 1.0   # canary tok/s ÷ baseline tok/s
     max_ttft_ratio: float = 2.0         # canary mean TTFT ÷ baseline

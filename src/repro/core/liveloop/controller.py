@@ -19,10 +19,12 @@ controller **tick** is one full turn of the crank:
 3. **canary** — if no canary is in flight and the candidate is neither
    blocked nor already the incumbent, propose it to the
    :class:`~repro.core.liveloop.canary.CanaryBook`; then measure one
-   window — incumbent and canary under the *same* arrivals, split
+   window — a canary-fraction slice of the trace, picked
    deterministically by :func:`~repro.core.liveloop.canary.split_indices`
-   — publish both measurements as feature-bearing serve records into the
-   shared cache, journal the window, and let the guardrails decide;
+   and replayed under *both* genomes (shadow replay, so the ratios
+   compare identical arrivals) — publish both measurements as
+   feature-bearing serve records into the shared cache, journal the
+   window, and let the guardrails decide;
 4. **reconcile** — make the registry's ``live`` pointer match the
    journal's promoted entry (reconciliation, not an event reaction, so a
    crash between the journal commit and the export heals on the next
@@ -237,12 +239,27 @@ class LiveLoopController:
             self.state = {"version": STATE_VERSION, "tick": 0,
                           "gens_done": 0, "arch": arch, "mode": mode,
                           "trace": trace.fingerprint()}
+            # journal the binding immediately: a loop is bound to its
+            # trace/arch/mode from creation, not from its first tick
+            atomic_write_json(state_path, self.state, sort_keys=True,
+                              indent=1)
 
+        # guardrail defaults are mode-aware: the modeled backend is
+        # deterministic so an identical candidate measures identically and
+        # a strict 1.0 throughput floor is safe; real replays are noisy
+        # run to run, so the default leaves the same headroom perf_ab uses
+        if guardrails is None and self.mode == "real":
+            guardrails = Guardrails(min_throughput_ratio=0.95)
         self.book = CanaryBook(os.path.join(root, "canary.json"),
                                fraction=self.fraction,
                                guardrails=guardrails)
+        # the journal wins on resume here too: the book restores its
+        # journaled fraction and guardrails, and the controller's traffic
+        # split must follow the book or a resumed loop would slice the
+        # trace differently than the one that wrote the journal
+        self.fraction = self.book.fraction
         self.registry = ArtifactRegistry(os.path.join(root, "registry"))
-        self.space = serve_schedule_space(arch)
+        self.space = serve_schedule_space(self.arch)
         self.cache = FitnessCache(os.path.join(root, "cache.jsonl"),
                                   writer="liveloop")
         self.workload = self._build_workload()
@@ -257,7 +274,7 @@ class LiveLoopController:
                              seed=seed, surrogate=surrogate,
                              surrogate_live=surrogate)
         self.measure = measure or (self._measure_modeled
-                                   if mode == "modeled"
+                                   if self.mode == "modeled"
                                    else self._measure_real)
         self._cfg = None
         self._params = None
@@ -321,34 +338,35 @@ class LiveLoopController:
         return runs[len(runs) // 2]
 
     # -- measurement backends ----------------------------------------------
-    def _split(self, tick: int) -> tuple[Trace, Trace]:
-        """The window's deterministic traffic split: (baseline slice,
-        canary slice) of the controller trace, derived from the trace
+    def _window_slice(self, tick: int) -> Trace:
+        """The window's measurement slice: the canary-fraction subset of
+        the controller trace, derived deterministically from the trace
         fingerprint and the tick — no RNG state, so a resumed process
-        splits identically.  Falls back to full-trace-on-both-sides when
-        a slice would be empty (a fraction too small for the trace)."""
+        slices identically.  Both genomes replay this *same* slice
+        (shadow replay), so the guardrail ratios compare identical
+        arrivals: a candidate identical to the incumbent measures
+        identically under the modeled backend and cannot be rolled back
+        by slice-composition noise.  Falls back to the full trace when
+        the fraction selects nothing."""
         idx = split_indices(len(self.trace), self.fraction,
                             salt=f"{self.trace.fingerprint()}:{tick}")
-        base_items = [it for it in self.trace.items if it.index not in idx]
-        can_items = [it for it in self.trace.items if it.index in idx]
-        if not base_items or not can_items:
-            return self.trace, self.trace
-        mk = lambda items: Trace(  # noqa: E731
-            scenario=self.trace.scenario, seed=self.trace.seed,
-            vocab=self.trace.vocab, items=items,
-            knobs=dict(self.trace.knobs))
-        return mk(base_items), mk(can_items)
+        items = [it for it in self.trace.items if it.index in idx]
+        if not items:
+            return self.trace
+        return Trace(scenario=self.trace.scenario, seed=self.trace.seed,
+                     vocab=self.trace.vocab, items=items,
+                     knobs=dict(self.trace.knobs))
 
     def _measure_modeled(self, base_genome: dict, cand_genome: dict,
                          tick: int) -> tuple[dict, dict]:
-        base_tr, can_tr = self._split(tick)
-        return simulate(base_tr, base_genome), simulate(can_tr, cand_genome)
+        tr = self._window_slice(tick)
+        return simulate(tr, base_genome), simulate(tr, cand_genome)
 
     def _measure_real(self, base_genome: dict, cand_genome: dict,
                       tick: int) -> tuple[dict, dict]:
-        base_tr, can_tr = self._split(tick)
-        return (self._replay_real(base_tr, base_genome),
-                self._replay_real(can_tr, cand_genome))
+        tr = self._window_slice(tick)
+        return (self._replay_real(tr, base_genome),
+                self._replay_real(tr, cand_genome))
 
     # -- serve-record publishing (the surrogate's live training signal) -----
     def _publish_window(self, genome: dict, metrics: dict, *, role: str,

@@ -276,9 +276,12 @@ def trace_from_records(cache_path: str) -> dict[str, Trace]:
                 continue  # torn tail of a crashed writer
             spec = (rec.get("meta") or {}).get("trace") \
                 if isinstance(rec, dict) else None
-            if not spec or spec.get("fingerprint") in out:
+            fp = spec.get("fingerprint") if isinstance(spec, dict) else None
+            # a spec without a fingerprint cannot be verified — skip it
+            # rather than let a corrupt spec pass unchecked under key None
+            if not fp or fp in out:
                 continue
-            out[spec["fingerprint"]] = trace_from_spec(spec)
+            out[fp] = trace_from_spec(spec)
     return out
 
 

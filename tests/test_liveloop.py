@@ -190,6 +190,40 @@ class TestControllerModeled:
         back = traces[ctl.trace.fingerprint()]
         assert back.fingerprint() == ctl.trace.fingerprint()
 
+    def test_trace_from_records_skips_unverifiable_specs(self, tmp_path):
+        """A record whose trace spec lacks a fingerprint cannot be
+        verified — it must be skipped, not stored under key None with
+        verification silently bypassed."""
+        tr = synthesize("steady", vocab=64, n_requests=4, seed=1)
+        bad_spec = {k: v for k, v in tr.spec().items()
+                    if k != "fingerprint"}
+        path = str(tmp_path / "cache.jsonl")
+        with open(path, "w") as f:
+            f.write(json.dumps({"meta": {"trace": bad_spec}}) + "\n")
+            f.write(json.dumps({"meta": {"trace": tr.spec()}}) + "\n")
+        traces = trace_from_records(path)
+        assert None not in traces
+        assert set(traces) == {tr.fingerprint()}
+
+    def test_window_shadow_replays_same_slice(self, tmp_path):
+        """Both sides of a canary window measure the same arrivals, so an
+        identical candidate scores exactly 1.0 and survives even the
+        strict default guardrails — never blocked by slice noise."""
+        ctl = _mk(tmp_path / "loop")
+        g = {"max_slots": 2, "prefill_chunk": 1}
+        base_m, can_m = ctl._measure_modeled(g, g, tick=0)
+        assert base_m == can_m
+        window = {"baseline": base_m, "canary": can_m}
+        v = verdict_of([window, window], Guardrails())   # default rails
+        assert v["decided"] and v["promote"]
+        assert v["ratios"]["throughput"] == pytest.approx(1.0)
+        # the slice is a strict subset driven by the fraction, and it
+        # varies by tick (fresh arrivals per window)
+        s0, s1 = ctl._window_slice(0), ctl._window_slice(1)
+        assert 0 < len(s0.items) < len(ctl.trace.items)
+        assert [it.index for it in s0.items] != \
+            [it.index for it in s1.items]
+
     def test_resume_binds_trace_arch_and_mode(self, tmp_path):
         root = tmp_path / "loop"
         ctl = _mk(root)
@@ -201,6 +235,46 @@ class TestControllerModeled:
         # constructor defaults must not silently switch the journaled mode
         back = LiveLoopController(str(root), mode="real")
         assert back.mode == "modeled"
+        # ...and the wiring must follow the journaled mode, not the
+        # constructor arg: measurement backend and workload alike
+        assert back.measure == back._measure_modeled
+        assert back.workload.time_mode == "static"
+
+    def test_resume_wires_journaled_mode_and_arch(self, tmp_path):
+        """A loop created with non-default mode/arch must resume with the
+        real measurement backend and the journaled arch's schedule space
+        even when the resuming constructor passes only defaults."""
+        root = str(tmp_path / "loop")
+        tr = synthesize("bursty", vocab=64, n_requests=12, max_prompt=12,
+                        gen=6, seed=0)
+        ctl = LiveLoopController(root, trace=tr, mode="real",
+                                 arch="minicpm-2b")
+        assert ctl.measure == ctl._measure_real
+        # resume with constructor defaults (the CLI `status`/`run` path
+        # and `launch.serve --liveloop` do exactly this)
+        back = LiveLoopController(root)
+        assert back.mode == "real" and back.arch == "minicpm-2b"
+        assert back.measure == back._measure_real
+        assert back.workload.time_mode == "measured"
+        assert back.space.name == ctl.space.name
+        assert back.workload.name == ctl.workload.name
+        # real-mode loops default to the noise-tolerant throughput floor
+        assert back.book.rails.min_throughput_ratio == pytest.approx(0.95)
+
+    def test_resume_follows_journaled_fraction(self, tmp_path):
+        """The canary traffic split must follow the journaled fraction on
+        resume, or a resumed loop would slice the trace differently than
+        the one that wrote the journal."""
+        root = str(tmp_path / "loop")
+        tr = synthesize("bursty", vocab=64, n_requests=12, max_prompt=12,
+                        gen=6, seed=0)
+        ctl = _mk(root, trace=tr, fraction=0.25)
+        ctl.run(1)
+        back = _mk(root, trace=tr)     # helper default fraction is 0.5
+        assert back.fraction == pytest.approx(0.25)
+        a = ctl._window_slice(7)
+        b = back._window_slice(7)
+        assert [it.index for it in a.items] == [it.index for it in b.items]
 
     def test_surrogate_refits_from_live_records(self, tmp_path):
         ctl = _mk(tmp_path / "loop", pop=6)
@@ -251,15 +325,16 @@ class TestKillAndResume:
         # re-publishes the last committed window
         ctl2 = _mk(root)
         t = ctl2.state["tick"] - 1
-        base, can = ctl2._split(t)
+        window = ctl2._window_slice(t)
         inc = ctl2.book.promoted
         if ctl2.book.active is not None:
             g = ctl2.book.active["genome"]
             ctl2.book.observe(tick=t,
-                              baseline=simulate(base, inc["genome"] if inc
+                              baseline=simulate(window,
+                                                inc["genome"] if inc
                                                 else {"max_slots": 2,
                                                       "prefill_chunk": 1}),
-                              canary=simulate(can, g))
+                              canary=simulate(window, g))
         ctl2._sync_promoted()
         assert _tree_bytes(root) == before
 
