@@ -1,7 +1,7 @@
 """§Perf A/B measurements.
 
-Nine suites (select with ``--suite {cells,evaluator,operators,kernels,
-islands,serving,tensor_evo,analysis,surrogate,all}``):
+Select with ``--suite {cells,evaluator,operators,kernels,islands,serving,
+tensor_evo,analysis,surrogate,liveloop,sharded_serving,all}``:
 
 * ``cells`` (default) — for each hillclimbed model cell, measures (under the
   FINAL roofline analyzer, so numbers are comparable) the paper-faithful
@@ -80,6 +80,17 @@ islands,serving,tensor_evo,analysis,surrogate,all}``):
   the real engine; a second, fault-injected run must be rolled back and
   its fingerprint blocked.  Writes experiments/perf/liveloop_ab.json
   (results quoted in EXPERIMENTS.md).
+
+* ``sharded_serving`` — A/Bs the full serving plan (engine schedule + KV
+  memory plan + replica layout) on the multi-replica router: GevoML
+  evolves the joint 432-point SERVE_SPACE under (modeled s/token, measured
+  quantized-cache decode error), the deployment rule
+  ``select("time", on="error", limit=KV_ERROR_GATE)`` picks the winner,
+  and the artifact is rebuilt as a real Router and re-measured against the
+  default plan (bar: >= 1.0x) plus the same plan pinned to one replica on
+  a 2x2 smoke mesh (bar: router >= single).  Writes
+  experiments/perf/sharded_serving_ab.json (results quoted in
+  EXPERIMENTS.md).
 
   PYTHONPATH=src python -m benchmarks.perf_ab
   PYTHONPATH=src python -m benchmarks.perf_ab --suite evaluator --workers 2
@@ -1095,6 +1106,217 @@ def liveloop_ab(ticks: int = 3, seed: int = 0) -> dict:
     return out
 
 
+def sharded_serving_ab(generations: int = 4, seed: int = 0,
+                       artifacts_dir: str = "experiments/artifacts") -> dict:
+    """Default serve plan vs an evolved FULL plan (slots x prefill chunk x
+    KV page size x cache dtype x replica layout) on the multi-replica
+    router.
+
+    ``GevoML`` (attr_tweak over the joint :data:`SERVE_SPACE`) searches the
+    432-point plan space under a deterministic two-objective fitness:
+    modeled s/token from the live loop's discrete-event serving model
+    (``liveloop.simulate``, replica- and byte-budget-aware) against the
+    *measured* quantized-cache decode error (memoized per
+    ``(kv_dtype, kv_page_size)`` — the model forward is plan-independent).
+    The deployment rule is the KV-plan fitness gate as code:
+    ``front.select("time", on="error", limit=KV_ERROR_GATE)``.  The winner
+    ships through the ArtifactRegistry, resolves back from disk, and is
+    re-measured as a real :class:`Router` (warmup + median of 3 full-trace
+    replays) against the default plan.  A second bar replays the same plan
+    at its replica fan-out vs pinned to one replica over the same smoke
+    mesh — the router must not lose to a single replica."""
+    import statistics
+    import tempfile
+
+    import jax
+    import numpy as np
+
+    from repro.configs import smoke_config
+    from repro.core import GevoML
+    from repro.core.deploy import (DEFAULT_SERVE_PLAN, KV_ERROR_GATE,
+                                   Artifact, ArtifactRegistry, KVPlan,
+                                   build_router, measure_cache_error,
+                                   serve_plan_from, serve_schedule_space)
+    from repro.core.evaluator import FitnessCache, SerialEvaluator
+    from repro.core.fitness import KernelWorkload
+    from repro.core.liveloop import replay, synthesize
+    from repro.core.liveloop.controller import simulate
+    from repro.core.serialize import patch_from_doc
+    from repro.launch.mesh import make_smoke_mesh
+    from repro.models.transformer import init_params
+
+    arch = "qwen3-0.6b"
+    cfg = smoke_config(arch)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    # slot-starved regime: enough concurrent requests that the default
+    # 2-slot plan queues heavily, so residency/replica knobs matter
+    trace = synthesize("bursty", vocab=cfg.vocab, n_requests=24,
+                       max_prompt=8, gen=8, seed=seed)
+    max_len = trace.max_len()
+    print(f"[sharded_serving_ab] trace: {trace.summary()}")
+
+    # -- evolve the full serving plan under the error-gated fitness ---------
+    space = serve_schedule_space(arch)
+    probe = np.asarray(
+        np.random.default_rng(seed).integers(1, cfg.vocab, size=(2, 8)))
+    err_memo: dict[tuple, float] = {}
+
+    def plan_error(genome: dict) -> float:
+        plan = KVPlan.from_genome(genome)
+        key = (plan.dtype, plan.page_size)
+        if key not in err_memo:
+            err_memo[key] = measure_cache_error(
+                cfg, params, plan, probe)["measured"]
+        return err_memo[key]
+
+    def runner(genome: dict) -> tuple[float, float]:
+        return (simulate(trace, genome)["s_per_token"], plan_error(genome))
+
+    w = KernelWorkload(name=f"serve/{arch}",
+                       program=space.encode(DEFAULT_SERVE_PLAN),
+                       space=space, runner=runner, time_mode="static",
+                       kind="serve")
+    cache_path = os.path.join(
+        tempfile.mkdtemp(prefix="gevoml_sharded_serving_ab_"),
+        "fitness.jsonl")
+    ev = SerialEvaluator(w, cache=FitnessCache(cache_path, writer="search"))
+    s = GevoML(w, pop_size=8, n_elite=4, seed=seed, init_mutations=2,
+               mutation_rate=0.9, operators={"attr_tweak": 1.0},
+               evaluator=ev)
+    t0 = time.perf_counter()
+    res = s.run(generations=generations)
+    wall_search = time.perf_counter() - t0
+    ev.close()
+
+    # the deployment rule: fastest modeled plan whose measured decode error
+    # clears the KV fitness gate
+    front = res.to_front(origin="sharded_serving_ab")
+    member = front.select("time", on="error", limit=KV_ERROR_GATE)
+    best_genome = w.space.decode(
+        patch_from_doc(list(member.patch)).apply(w.program))
+    sim_default = simulate(trace, dict(DEFAULT_SERVE_PLAN))
+    sim_evolved = simulate(trace, best_genome)
+    modeled_ratio = round(sim_evolved["throughput_tok_s"]
+                          / max(sim_default["throughput_tok_s"], 1e-9), 3)
+    print(f"[sharded_serving_ab] selected plan {best_genome} "
+          f"(error {member.fitness[1]:.4g} <= gate {KV_ERROR_GATE}); "
+          f"modeled evolved/default throughput={modeled_ratio}x")
+
+    # -- ship it: export the winner, resolve it back ------------------------
+    registry = ArtifactRegistry(artifacts_dir)
+    art_path = registry.export(Artifact(
+        kind="serve", name=cfg.name, shape="sharded_smoke",
+        genome=best_genome, fitness=member.fitness,
+        meta={"rule": f"min modeled s/token s.t. "
+                      f"cache error <= {KV_ERROR_GATE}",
+              "trace": trace.summary(), "suite": "sharded_serving_ab"}))
+    resolved = registry.resolve(cfg.name, "sharded_smoke", kind="serve")
+    evolved_plan = serve_plan_from(resolved)
+
+    # -- re-measure real routers from scratch on one smoke mesh -------------
+    # every arm runs on the SAME mesh: replicas split its data rows into
+    # submeshes (params + caches sharded per row group), a 1-replica plan
+    # owns the whole mesh — the honest apples-to-apples for a plan whose
+    # replica knob means "parallel hardware"
+    multi_plan = dict(evolved_plan)
+    if int(multi_plan["replicas"]) < 2:
+        multi_plan["replicas"] = 2
+    single_plan = dict(multi_plan, replicas=1)
+    mesh = make_smoke_mesh(int(multi_plan["replicas"]), 2)
+
+    def measure(tag, plan_genome, *, mesh=None, publish=False):
+        runs, stats = [], None
+        for rep in range(4):
+            router = build_router(cfg, params, genome=plan_genome,
+                                  max_len=max_len, mesh=mesh, seed=seed)
+            report = replay(router, trace)
+            assert report.n_rejected == 0 and \
+                len(report.results) == len(trace.items), \
+                f"{tag}: replay dropped requests"
+            stats = router.stats()
+            if rep == 0:        # unmeasured warmup: XLA compiles stay out
+                if publish:
+                    cache = FitnessCache(cache_path, writer="serve")
+                    router.publish_stats(cache, name=cfg.name,
+                                         shape={"plan": tag,
+                                                "trace": trace.summary()})
+                    cache.close()
+                continue
+            runs.append(stats["throughput_tok_s"])
+        med = statistics.median(runs)
+        rec = {"plan": dict(plan_genome), "throughput_tok_s": med,
+               "runs_tok_s": runs, "n_replicas": stats["n_replicas"],
+               "effective_slots": router.replicas[0].engine.max_slots,
+               "on_mesh": mesh is not None}
+        print(f"[sharded_serving_ab] {tag}: replicas="
+              f"{stats['n_replicas']} -> {med:.1f} tok/s (runs {runs})")
+        return rec
+
+    default_rec = measure("default", dict(DEFAULT_SERVE_PLAN), mesh=mesh,
+                          publish=True)
+    evolved_rec = measure("evolved", evolved_plan, mesh=mesh, publish=True)
+    plan_ratio = round(evolved_rec["throughput_tok_s"]
+                       / max(default_rec["throughput_tok_s"], 1e-9), 3)
+
+    # -- router vs a single replica of the same plan ------------------------
+    router_rec = measure("router", multi_plan, mesh=mesh)
+    single_rec = measure("single", single_plan, mesh=mesh)
+    router_ratio = round(router_rec["throughput_tok_s"]
+                         / max(single_rec["throughput_tok_s"], 1e-9), 3)
+
+    n_serve_records = sum(
+        1 for line in open(cache_path)
+        if json.loads(line).get("writer") == "serve")
+    out = {
+        "arch": cfg.name, "trace": trace.summary(),
+        "generations": generations,
+        "search": {"wall_s": round(wall_search, 2), "n_evals": s.n_evals,
+                   "space_size": space.size(),
+                   "selected_genome": best_genome,
+                   "selected_fitness": list(member.fitness),
+                   "error_gate": KV_ERROR_GATE,
+                   "default_fitness": list(res.original_fitness),
+                   "front_size": len(front.members),
+                   "measured_cache_errors": {
+                       f"{k[0]}/p{k[1]}": round(v, 6)
+                       for k, v in sorted(err_memo.items())}},
+        "modeled_ratio_evolved_vs_default": modeled_ratio,
+        "artifact": {"path": art_path,
+                     "fingerprint": resolved.fingerprint()},
+        "default": default_rec,
+        "evolved": evolved_rec,
+        "throughput_ratio_evolved_vs_default": plan_ratio,
+        "router_on_mesh": router_rec,
+        "single_on_mesh": single_rec,
+        "throughput_ratio_router_vs_single": router_ratio,
+        "serve_cache_records": n_serve_records,
+    }
+    # acceptance bars: the gate-feasible evolved plan must not lose to the
+    # default plan (modeled and real), the replica fan-out must not lose to
+    # one replica of the same plan on the smoke mesh, and both router
+    # measurements must have fed serve-tagged records back into the cache
+    assert member.fitness[1] <= KV_ERROR_GATE, \
+        "select() returned a plan outside the decode-error gate"
+    assert modeled_ratio >= 1.0, \
+        f"evolved plan lost to the default under the model ({modeled_ratio}x)"
+    assert plan_ratio >= 1.0, \
+        (f"evolved serve plan lost to the default plan "
+         f"({evolved_rec['throughput_tok_s']:.1f} vs "
+         f"{default_rec['throughput_tok_s']:.1f} tok/s)")
+    assert router_ratio >= 1.0, \
+        (f"router lost to a single replica of the same plan "
+         f"({router_rec['throughput_tok_s']:.1f} vs "
+         f"{single_rec['throughput_tok_s']:.1f} tok/s)")
+    assert n_serve_records >= 2, "no serve-tagged records in the cache"
+    os.makedirs(OUT, exist_ok=True)
+    path = os.path.join(OUT, "sharded_serving_ab.json")
+    json.dump(out, open(path, "w"), indent=1)
+    print(f"[sharded_serving_ab] wrote {path}; evolved/default="
+          f"{plan_ratio}x, router/single={router_ratio}x "
+          f"({n_serve_records} serve-tagged cache records)")
+    return out
+
+
 def run_cells():
     os.makedirs(OUT, exist_ok=True)
 
@@ -1148,7 +1370,8 @@ def main():
     ap.add_argument("--suite",
                     choices=("cells", "evaluator", "operators", "kernels",
                              "islands", "serving", "tensor_evo", "analysis",
-                             "surrogate", "liveloop", "all"),
+                             "surrogate", "liveloop", "sharded_serving",
+                             "all"),
                     default="cells")
     ap.add_argument("--workers", type=int, default=2,
                     help="ParallelEvaluator workers for --suite evaluator")
@@ -1174,6 +1397,8 @@ def main():
         surrogate_ab(generations=max(args.generations, 10))
     if args.suite in ("liveloop", "all"):
         liveloop_ab()
+    if args.suite in ("sharded_serving", "all"):
+        sharded_serving_ab(generations=max(args.generations, 4))
 
 
 if __name__ == "__main__":

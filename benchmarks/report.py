@@ -190,7 +190,20 @@ def suite_headlines(d: str = PERF_DIR) -> None:
               f"{ll['promote']['default_tok_s']['median']:.0f} tok/s, "
               f"{ll['ticks']} ticks); fault-injected arm rolled back and "
               f"blocked {len(rb['blocked'])} fingerprint(s) |")
-    if not any((ev, op, kn, isl, sv, tv, an, sur, ll)):
+    sh = load("sharded_serving_ab.json")
+    if sh:
+        g = sh["search"]["selected_genome"]
+        print(f"| sharded_serving | evolved serve plan "
+              f"(max_slots={g['max_slots']}, "
+              f"kv={g['kv_dtype']}/p{g['kv_page_size']}, "
+              f"replicas={g['replicas']}) = "
+              f"{sh['throughput_ratio_evolved_vs_default']}x throughput vs "
+              f"the default plan on a smoke mesh "
+              f"({sh['evolved']['throughput_tok_s']:.0f} vs "
+              f"{sh['default']['throughput_tok_s']:.0f} tok/s); router = "
+              f"{sh['throughput_ratio_router_vs_single']}x a single "
+              f"replica of the same plan |")
+    if not any((ev, op, kn, isl, sv, tv, an, sur, ll, sh)):
         print(f"| (none) | no *_ab.json suite records under {d} |")
 
 

@@ -23,13 +23,16 @@ this repo's smoke configs but shaped like the real thing:
   ``serve`` writer tag — the serving fleet reports fitness into the same
   store the search reads.
 
-The engine's *own* schedule (``max_slots``, ``prefill_chunk``) is a
-searchable genome: :func:`serve_schedule_space` declares it as a
+The engine's *own* schedule (``max_slots``, ``prefill_chunk``) — joined
+with the KV memory plan from :mod:`~repro.core.deploy.kvplan` (page size,
+cache dtype, replica layout) — is a searchable genome:
+:func:`serve_schedule_space` declares the merged plan as a
 :class:`~repro.core.schedule.ScheduleSpace` and :func:`build_serve_workload`
 wraps a replayed request trace as a measured-fitness
 :class:`~repro.core.fitness.KernelWorkload`, so ``GevoML`` evolves the
-serving schedule with the same engine that evolves kernels — and the winner
+serving plan with the same engine that evolves kernels — and the winner
 ships through the :class:`~repro.core.deploy.registry.ArtifactRegistry`.
+The multi-replica fan-out lives in :mod:`~repro.core.deploy.router`.
 
 Model functions are imported lazily from ``repro.models`` (this module is
 the bridge between the core search stack and the launch stack, like
@@ -50,6 +53,7 @@ import numpy as np
 
 from ..evaluator import EvalOutcome, FitnessCache
 from ..schedule import ScheduleSpace
+from .kvplan import DEFAULT_KV_PLAN, KV_SPACE, KVPlan
 from .registry import Artifact, shape_tag
 
 # Model-config knobs a serving path may safely take from a distribution-plan
@@ -58,13 +62,22 @@ SERVE_PLAN_KEYS = ("attn_impl", "attn_block")
 
 # The engine's own searchable schedule + the shipped default (the old
 # one-shot launcher behaved like a conservative 2-slot engine).
-SERVE_SPACE: dict[str, tuple] = {"max_slots": (1, 2, 4, 8),
-                                 "prefill_chunk": (1, 2, 4)}
+ENGINE_SPACE: dict[str, tuple] = {"max_slots": (1, 2, 4, 8),
+                                  "prefill_chunk": (1, 2, 4)}
 DEFAULT_ENGINE_SCHEDULE: dict = {"max_slots": 2, "prefill_chunk": 1}
+
+# The full serving plan: the engine schedule joined with the KV memory /
+# parallelism plan (``kvplan.KV_SPACE``) — slots × prefill chunk × page
+# size × cache dtype × replica layout as ONE genome space, so the search
+# trades memory residency against decode error against replica throughput
+# in a single Pareto front.
+SERVE_SPACE: dict[str, tuple] = {**ENGINE_SPACE, **KV_SPACE}
+DEFAULT_SERVE_PLAN: dict = {**DEFAULT_ENGINE_SCHEDULE, **DEFAULT_KV_PLAN}
 
 
 def serve_schedule_space(arch: str) -> ScheduleSpace:
-    """The serving-engine schedule as a searchable genome space."""
+    """The full serving plan (engine schedule + KV memory plan) as a
+    searchable genome space."""
     return ScheduleSpace.of(f"serve/{arch}", SERVE_SPACE)
 
 
@@ -80,8 +93,21 @@ def apply_plan_artifact(cfg, artifact: Artifact | None):
 
 
 def engine_schedule_from(artifact: Artifact | None) -> dict:
-    """The engine schedule an artifact prescribes (defaults filled in)."""
+    """The engine schedule an artifact prescribes (defaults filled in;
+    KV-plan knobs are resolved separately — :func:`serve_plan_from`)."""
     g = dict(DEFAULT_ENGINE_SCHEDULE)
+    if artifact is not None:
+        g.update({k: artifact.genome[k] for k in ENGINE_SPACE
+                  if k in artifact.genome})
+    return g
+
+
+def serve_plan_from(artifact: Artifact | None) -> dict:
+    """The FULL serving plan an artifact prescribes: engine schedule plus
+    KV-plan knobs, every missing knob at its shipped default — the genome
+    the router and the live loop hand to :class:`~repro.core.deploy.kvplan.
+    KVPlan.from_genome`."""
+    g = dict(DEFAULT_SERVE_PLAN)
     if artifact is not None:
         g.update({k: artifact.genome[k] for k in SERVE_SPACE
                   if k in artifact.genome})
@@ -217,17 +243,27 @@ class ServeEngine:
     taking ``ab_fraction`` of unpinned requests.  ``params=None`` initializes
     random weights (the smoke/demo path).  ``max_len`` bounds
     ``prompt + generation`` per request; every slot cache is allocated at
-    ``max_len`` so any group of slots can decode together."""
+    ``max_len`` so any group of slots can decode together.
+
+    ``admit_max_wait`` bounds admission reordering: the prompt-length
+    grouping below prefers same-length prefill batches, but any request
+    queued longer than this many ticks forces strict oldest-first
+    admission, so an odd-length prompt can never be starved behind a
+    steady stream of grouping-friendly ones."""
 
     def __init__(self, cfg, params=None, *, max_len: int = 128,
                  max_slots: int = 4, prefill_chunk: int = 2,
                  evolved_cfg=None, ab_fraction: float = 0.0,
-                 temperature: float = 0.0, seed: int = 0):
+                 temperature: float = 0.0, seed: int = 0,
+                 admit_max_wait: int = 32):
         import jax
         if cfg.family == "encoder":
             raise ValueError("encoder-only arch has no decode step")
         if max_slots < 1 or prefill_chunk < 1:
             raise ValueError("max_slots and prefill_chunk must be >= 1")
+        if admit_max_wait < 1:
+            raise ValueError("admit_max_wait must be >= 1")
+        self.admit_max_wait = admit_max_wait
         self.cfgs = {"default": cfg}
         if evolved_cfg is not None:
             self.cfgs["evolved"] = evolved_cfg
@@ -265,6 +301,7 @@ class ServeEngine:
                              f"{req.variant!r} (have {list(self.cfgs)})")
         req.tokens = tokens
         req._t_submit = _time.perf_counter()
+        req._enq_tick = self.n_ticks
         self.queue.append(req)
 
     def try_submit(self, req: ServeRequest) -> bool:
@@ -306,6 +343,38 @@ class ServeEngine:
     def _n_in_flight(self) -> int:
         return sum(b.n_active() for b in self.batches.values())
 
+    def _select_admissions(self, n_take: int) -> list[ServeRequest]:
+        """Pick ``n_take`` queued requests for this tick's prefill.
+
+        Preference: the queue's most common prompt length (ties broken
+        toward the earliest arrival), so a full chunk usually prefills as
+        ONE pad-free batch; remaining seats fill oldest-first.  Bound: if
+        the oldest queued request has waited ``admit_max_wait`` ticks, the
+        whole pick is strict FIFO — grouping must never starve an
+        odd-length prompt behind a steady stream of same-length ones."""
+        q = self.queue
+        if self.n_ticks - getattr(q[0], "_enq_tick", self.n_ticks) \
+                >= self.admit_max_wait:
+            return [q.popleft() for _ in range(n_take)]
+        counts: dict[int, int] = {}
+        first_at: dict[int, int] = {}
+        for i, r in enumerate(q):
+            plen = len(r.tokens)
+            counts[plen] = counts.get(plen, 0) + 1
+            first_at.setdefault(plen, i)
+        best = max(counts, key=lambda p: (counts[p], -first_at[p]))
+        take: list[ServeRequest] = []
+        rest: list[ServeRequest] = []
+        for r in q:
+            if len(r.tokens) == best and len(take) < n_take:
+                take.append(r)
+            else:
+                rest.append(r)
+        while len(take) < n_take:
+            take.append(rest.pop(0))
+        self.queue = deque(rest)
+        return take
+
     def _admit(self) -> None:
         import jax
 
@@ -314,7 +383,7 @@ class ServeEngine:
         n_take = min(n_free, self.prefill_chunk, len(self.queue))
         if n_take <= 0:
             return
-        admitted = [self.queue.popleft() for _ in range(n_take)]
+        admitted = self._select_admissions(n_take)
         t_admit = _time.perf_counter()
         groups: dict[tuple, list[ServeRequest]] = {}
         for req in admitted:
@@ -372,8 +441,14 @@ class ServeEngine:
                 sub, logits / self.temperature)).astype(np.int32)
         return np.asarray(jnp.argmax(logits, -1)).astype(np.int32)
 
-    def _decode_tick(self) -> None:
+    def _decode_dispatch(self) -> list[tuple]:
+        """Phase 1 of a decode tick: launch ONE vmapped decode dispatch per
+        active variant and return the in-flight ``(variant, active,
+        logits)`` work items *without* blocking on the results — a router
+        interleaves dispatches across replicas so each replica's compute
+        overlaps its siblings' host work."""
         import jax.numpy as jnp
+        pending = []
         for variant in sorted(self.batches):
             batch = self.batches[variant]
             active = batch.active()
@@ -400,6 +475,14 @@ class ServeEngine:
             logits, batch.caches = dec_fn(self.params, tb, batch.caches,
                                           jnp.asarray(idx))
             self.n_decode_batches += 1
+            pending.append((variant, active, logits))
+        return pending
+
+    def _decode_complete(self, pending: list[tuple]) -> None:
+        """Phase 2 of a decode tick: sample next tokens (this is where the
+        host blocks on device results) and advance lane bookkeeping."""
+        for variant, active, logits in pending:
+            batch = self.batches[variant]
             nxt = self._sample(logits[:, 0])
             t_now = _time.perf_counter()
             for i, lane in active:
@@ -409,6 +492,9 @@ class ServeEngine:
                 lane.last = tok
                 if self._maybe_finish(lane, t_now):
                     batch.lanes[i] = None
+
+    def _decode_tick(self) -> None:
+        self._decode_complete(self._decode_dispatch())
 
     def _maybe_finish(self, lane: _Lane, t_now: float) -> bool:
         req = lane.req
@@ -426,14 +512,27 @@ class ServeEngine:
     def busy(self) -> bool:
         return bool(self.queue) or self._n_in_flight() > 0
 
-    def step(self) -> None:
-        """One engine tick: admit + micro-batch prefill new requests, then
-        advance every in-flight sequence one decode step."""
+    def begin_step(self) -> list[tuple]:
+        """The first half of a tick: admit + micro-batch prefill new
+        requests, then *dispatch* (without blocking) the decode batch.
+        Callers that drive several engines — the multi-replica router —
+        begin every replica's step before finishing any, so device compute
+        overlaps across replicas."""
         if self._t0 is None:
             self._t0 = _time.perf_counter()
         self.n_ticks += 1
         self._admit()
-        self._decode_tick()
+        return self._decode_dispatch()
+
+    def finish_step(self, pending: list[tuple]) -> None:
+        """The second half of a tick: block on the dispatched decode,
+        sample, and retire finished lanes."""
+        self._decode_complete(pending)
+
+    def step(self) -> None:
+        """One engine tick: admit + micro-batch prefill new requests, then
+        advance every in-flight sequence one decode step."""
+        self.finish_step(self.begin_step())
 
     def run(self, requests=None, *, stagger: int | None = None
             ) -> list[ServeResult]:
@@ -603,8 +702,12 @@ def build_serve_workload(arch: str = "qwen3-0.6b", *, smoke: bool = True,
 
     def runner(genome: dict) -> tuple[float, float]:
         from ..liveloop.traces import demo_requests
+        # the KV plan clamps residency: slots the plan's pages cannot fit
+        # in the modeled byte budget are not granted
+        plan = KVPlan.from_genome(genome)
         engine = ServeEngine(cfg, params, max_len=max_len,
-                             max_slots=genome["max_slots"],
+                             max_slots=plan.effective_slots(
+                                 genome["max_slots"], max_len),
                              prefill_chunk=genome["prefill_chunk"])
         engine.run(demo_requests(cfg, n_requests=n_requests,
                                  prompt_len=prompt_len, gen=gen, seed=seed),
@@ -616,7 +719,7 @@ def build_serve_workload(arch: str = "qwen3-0.6b", *, smoke: bool = True,
 
     return KernelWorkload(
         name=f"serve/{arch}",
-        program=space.encode(DEFAULT_ENGINE_SCHEDULE),
+        program=space.encode(DEFAULT_SERVE_PLAN),
         space=space,
         runner=runner,
         time_mode="measured",

@@ -12,9 +12,11 @@ application methodology made operational):
   machine (candidate→canary→promoted | rolled_back) with deterministic
   traffic splits and pure-function guardrail verdicts;
 * :mod:`~repro.core.liveloop.controller` — the background evolution loop:
-  a GevoML island over the serve schedule space with the live surrogate,
-  candidate export through the ArtifactRegistry, canary windows, and
-  journal/registry reconciliation, all kill-anywhere resumable;
+  a GevoML island over the full serve-plan space (engine schedule + KV
+  memory plan + replica layout) with the live surrogate, candidate export
+  through the ArtifactRegistry, canary windows (multi-replica plans
+  canary through the deploy :class:`~repro.core.deploy.router.Router`),
+  and journal/registry reconciliation, all kill-anywhere resumable;
 * ``python -m repro.core.liveloop`` — the operator CLI (``synth``,
   ``run``, ``status``, ``promote``, ``rollback``).
 """

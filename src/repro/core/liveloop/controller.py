@@ -52,7 +52,8 @@ import json
 import os
 from collections import deque
 
-from ..deploy.engine import DEFAULT_ENGINE_SCHEDULE, serve_schedule_space
+from ..deploy.engine import DEFAULT_SERVE_PLAN, serve_schedule_space
+from ..deploy.kvplan import KV_SPACE, KVPlan
 from ..deploy.registry import Artifact, ArtifactRegistry
 from ..evaluator import EvalOutcome, FitnessCache, SerialEvaluator
 from ..fitness import KernelWorkload
@@ -83,7 +84,7 @@ def genome_fingerprint(genome: dict) -> str:
 
 def simulate(trace: Trace, genome: dict, *, slow: float = 1.0) -> dict:
     """A pure-Python cost model of :class:`~repro.core.deploy.ServeEngine`
-    replaying ``trace`` under engine schedule ``genome``: slot admission
+    replaying ``trace`` under serve genome ``genome``: slot admission
     (``max_slots``), micro-batched pad-free prefill (``prefill_chunk``,
     one batch per distinct prompt length), and one decode dispatch per
     tick advancing every lane.  Tick cost = base + prefill batches +
@@ -91,14 +92,54 @@ def simulate(trace: Trace, genome: dict, *, slow: float = 1.0) -> dict:
     hook's lever).  Deterministic in all inputs, no jax — the landscape
     the modeled evolution searches, and the modeled canary measurement.
 
+    KV-plan knobs (any :data:`~repro.core.deploy.kvplan.KV_SPACE` key
+    present) extend the model: the plan's paged byte budget clamps
+    ``max_slots`` (:meth:`KVPlan.effective_slots`) and ``replicas`` fans
+    the trace round-robin over N concurrent engine models whose modeled
+    wall is the slowest replica's — the data-parallel hardware model.
+    Engine-only genomes behave exactly as before.
+
     Returns the same metric vocabulary the real engine's ``stats()``
     speaks: throughput_tok_s, mean_ttft_s, mean_latency_s, reject_rate,
     gen_tokens, wall_s, s_per_token."""
     m, c = int(genome["max_slots"]), int(genome["prefill_chunk"])
     if m < 1 or c < 1:
         raise ValueError("max_slots and prefill_chunk must be >= 1")
+    replicas = 1
+    if any(k in genome for k in KV_SPACE):
+        plan = KVPlan.from_genome(genome)
+        m = plan.effective_slots(m, trace.max_len())
+        replicas = plan.replicas
+    last_arrival = trace.n_ticks()
+    if replicas <= 1:
+        return _simulate_items(trace.items, last_arrival, m, c, slow)
+    shards = [trace.items[i::replicas] for i in range(replicas)]
+    runs = [_simulate_items(s, last_arrival, m, c, slow) for s in shards]
+    # data-parallel replicas run concurrently: wall = slowest replica
+    wall = max(r["wall_s"] for r in runs)
+    gen_tokens = sum(r["gen_tokens"] for r in runs)
+    n_done = sum(r["n"] for r in runs)
+
+    def _wmean(key: str) -> float:
+        tot = sum(r[key] * r["n"] for r in runs)
+        return round(tot / n_done, 6) if n_done else 0.0
+    return {"throughput_tok_s": round(gen_tokens / wall, 6) if wall
+            else 0.0,
+            "mean_ttft_s": _wmean("mean_ttft_s"),
+            "mean_latency_s": _wmean("mean_latency_s"),
+            "reject_rate": 0.0,
+            "gen_tokens": gen_tokens,
+            "wall_s": round(wall, 6),
+            "s_per_token": round(wall / gen_tokens, 6) if gen_tokens
+            else 0.0,
+            "n": n_done}
+
+
+def _simulate_items(items, last_arrival: int, m: int, c: int,
+                    slow: float) -> dict:
+    """One modeled engine replica over ``items`` (see :func:`simulate`)."""
     by_tick: dict[int, list] = {}
-    for it in trace.items:
+    for it in items:
         by_tick.setdefault(it.at_tick, []).append(it)
     queue: deque = deque()
     lanes: list[list] = []          # [item, tokens_remaining]
@@ -108,7 +149,6 @@ def simulate(trace: Trace, genome: dict, *, slow: float = 1.0) -> dict:
     gen_tokens = 0
     t_now = 0.0
     tick = 0
-    last_arrival = trace.n_ticks()
     while queue or lanes or tick < last_arrival:
         for it in by_tick.get(tick, ()):
             queue.append(it)
@@ -293,7 +333,7 @@ class LiveLoopController:
             time_mode = "measured"
         return KernelWorkload(
             name=f"liveloop/{self.arch}",
-            program=self.space.encode(DEFAULT_ENGINE_SCHEDULE),
+            program=self.space.encode(DEFAULT_SERVE_PLAN),
             space=self.space,
             runner=runner,
             time_mode=time_mode,
@@ -313,23 +353,39 @@ class LiveLoopController:
     def _replay_real(self, trace: Trace, genome: dict) -> dict:
         """Replay ``trace`` through a real engine under ``genome``,
         ``repeats`` times, and return the median-throughput replay's
-        metrics.  The first replay of a (schedule, trace) pair in this
-        process is an unmeasured warmup — a fresh schedule's XLA compiles
-        must not land inside its first timed window, or every canary
-        would lose its opening guardrail check to the warm incumbent."""
+        metrics.  A genome whose plan fans out (``replicas`` > 1) replays
+        through a multi-replica :class:`~repro.core.deploy.router.Router`;
+        either way the KV plan clamps slots, so the canary measures the
+        plan it would promote.  The first replay of a (plan, trace) pair
+        in this process is an unmeasured warmup — a fresh schedule's XLA
+        compiles must not land inside its first timed window, or every
+        canary would lose its opening guardrail check to the warm
+        incumbent."""
         from ..deploy.engine import ServeEngine
+        from ..deploy.router import Router
         from .traces import replay
         cfg, params = self._model()
-        sched = (int(genome["max_slots"]), int(genome["prefill_chunk"]))
+        plan = KVPlan.from_genome(genome)
+        slots = plan.effective_slots(int(genome["max_slots"]),
+                                     trace.max_len())
+        chunk = int(genome["prefill_chunk"])
 
         def one() -> dict:
-            engine = ServeEngine(cfg, params, max_len=trace.max_len(),
-                                 max_slots=sched[0],
-                                 prefill_chunk=sched[1])
-            replay(engine, trace)
-            return _engine_metrics(engine.stats(), engine.n_rejected)
+            if plan.replicas > 1:
+                engines = [ServeEngine(cfg, params,
+                                       max_len=trace.max_len(),
+                                       max_slots=slots,
+                                       prefill_chunk=chunk, seed=i)
+                           for i in range(plan.replicas)]
+                target = Router(engines, plan=plan, genome=dict(genome))
+            else:
+                target = ServeEngine(cfg, params, max_len=trace.max_len(),
+                                     max_slots=slots, prefill_chunk=chunk)
+            replay(target, trace)
+            return _engine_metrics(target.stats(), target.n_rejected)
 
-        warm_key = sched + (trace.fingerprint(),)
+        warm_key = (slots, chunk, plan.page_size, plan.dtype,
+                    plan.replicas, trace.fingerprint())
         if warm_key not in self._warmed:
             one()
             self._warmed.add(warm_key)
@@ -450,7 +506,7 @@ class LiveLoopController:
         outcome = None
         if self.book.active is not None:
             base_genome = (incumbent["genome"] if incumbent
-                           else dict(DEFAULT_ENGINE_SCHEDULE))
+                           else dict(DEFAULT_SERVE_PLAN))
             cand_genome = self.book.active["genome"]
             base_m, can_m = self.measure(base_genome, cand_genome, t)
             if self.fault_hook is not None:

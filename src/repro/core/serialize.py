@@ -137,14 +137,28 @@ def atomic_write_json(path: str, doc: dict, *, sort_keys: bool = False,
 
     ``sort_keys=True`` makes the bytes a canonical function of the doc's
     content (the artifact registry requires byte-identical re-exports);
-    ``indent`` trades compactness for a human-auditable file."""
+    ``indent`` trades compactness for a human-auditable file.
+
+    The tmp file is unique per writer (not ``path + ".tmp"``): concurrent
+    exporters of the same key must each replace their own snapshot, never
+    race on a shared sibling — last writer wins atomically."""
+    import tempfile
     d = os.path.dirname(path)
     if d:
         os.makedirs(d, exist_ok=True)
-    tmp = path + ".tmp"
-    with open(tmp, "w") as f:
-        json.dump(doc, f, sort_keys=sort_keys, indent=indent)
-    os.replace(tmp, path)
+    fd, tmp = tempfile.mkstemp(dir=d or ".",
+                               prefix=os.path.basename(path) + ".",
+                               suffix=".tmp")
+    try:
+        with os.fdopen(fd, "w") as f:
+            json.dump(doc, f, sort_keys=sort_keys, indent=indent)
+        os.replace(tmp, path)
+    except BaseException:
+        try:
+            os.unlink(tmp)
+        except OSError:
+            pass
+        raise
 
 
 # --------------------------------------------------------------------------

@@ -17,6 +17,12 @@ writer tag.
   # the pre-engine one-shot behavior (correctness oracle)
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b --smoke \
       --oneshot --requests 4 --prompt-len 32 --gen 16
+
+  # multi-replica serving through the deploy router (optionally sharded
+  # over a smoke mesh; see also `python -m repro.core.deploy.router`)
+  XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen3-0.6b --smoke \
+      --replicas 2 --mesh 2x2 --requests 8 --prompt-len 16 --gen 6
 """
 
 from __future__ import annotations
@@ -41,6 +47,13 @@ def main() -> None:
     ap.add_argument("--prefill-chunk", type=int, default=None,
                     help="admissions micro-batched per tick")
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--replicas", type=int, default=None,
+                    help="data-parallel engine replicas behind the deploy "
+                         "router (default: the resolved serve plan's "
+                         "replicas knob, usually 1)")
+    ap.add_argument("--mesh", default=None,
+                    help="DATAxMODEL smoke mesh for the replicas, e.g. "
+                         "2x2 (requires that many XLA host devices)")
     ap.add_argument("--artifacts", default=None,
                     help="ArtifactRegistry directory (serve-schedule and "
                          "plan artifacts)")
@@ -70,8 +83,8 @@ def main() -> None:
 
     from ..configs import get_config, smoke_config
     from ..core.deploy import (ArtifactRegistry, ServeEngine,
-                               apply_plan_artifact, engine_schedule_from,
-                               oneshot_generate)
+                               apply_plan_artifact, build_router,
+                               oneshot_generate, serve_plan_from)
     from ..core.evaluator import FitnessCache
     from ..core.liveloop.traces import demo_requests
 
@@ -98,7 +111,7 @@ def main() -> None:
         serve_art = registry.resolve(cfg.name, "smoke" if args.smoke
                                      else "full", kind="serve")
         plan_art = registry.resolve(cfg.name, args.plan_shape, kind="plan")
-    schedule = engine_schedule_from(serve_art)
+    schedule = serve_plan_from(serve_art)
     if args.liveloop:
         # the loop's promoted schedule wins over the static registry: this
         # is the serving end of evolve->serve->measure->promote
@@ -119,6 +132,8 @@ def main() -> None:
         schedule["max_slots"] = args.max_slots
     if args.prefill_chunk is not None:
         schedule["prefill_chunk"] = args.prefill_chunk
+    if args.replicas is not None:
+        schedule["replicas"] = args.replicas
 
     evolved_cfg, ab = None, 0.0
     if args.variant in ("evolved", "ab"):
@@ -130,20 +145,33 @@ def main() -> None:
         evolved_cfg = apply_plan_artifact(cfg, plan_art)
         ab = 1.0 if args.variant == "evolved" else args.ab_fraction
 
-    engine = ServeEngine(cfg, max_len=args.prompt_len + args.gen,
-                         max_slots=schedule["max_slots"],
-                         prefill_chunk=schedule["prefill_chunk"],
-                         evolved_cfg=evolved_cfg, ab_fraction=ab,
-                         temperature=args.temperature)
+    if int(schedule.get("replicas", 1)) > 1:
+        mesh = None
+        if args.mesh:
+            from .mesh import make_smoke_mesh
+            d, m = (int(x) for x in args.mesh.lower().split("x"))
+            mesh = make_smoke_mesh(d, m)
+        engine = build_router(cfg, genome=schedule,
+                              max_len=args.prompt_len + args.gen,
+                              mesh=mesh, evolved_cfg=evolved_cfg,
+                              ab_fraction=ab,
+                              temperature=args.temperature)
+    else:
+        engine = ServeEngine(cfg, max_len=args.prompt_len + args.gen,
+                             max_slots=schedule["max_slots"],
+                             prefill_chunk=schedule["prefill_chunk"],
+                             evolved_cfg=evolved_cfg, ab_fraction=ab,
+                             temperature=args.temperature)
     trace = demo_requests(cfg, n_requests=args.requests,
                           prompt_len=args.prompt_len, gen=args.gen)
     results = engine.run(trace, stagger=args.stagger or None)
 
     s = engine.stats()
+    replica_note = (f" replicas={s['n_live']}/{s['n_replicas']}"
+                    if "n_replicas" in s else "")
     print(f"arch={cfg.name} requests={len(results)} "
-          f"schedule={schedule} "
-          f"ticks={s['ticks']} prefill_batches={s['prefill_batches']} "
-          f"decode_batches={s['decode_batches']}")
+          f"schedule={schedule}{replica_note} "
+          f"ticks={s['ticks']}")
     print(f"wall={s['wall_s']:.2f}s throughput={s['throughput_tok_s']:.1f} "
           f"tok/s")
     for variant, rec in s["per_variant"].items():

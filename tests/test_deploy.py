@@ -60,10 +60,35 @@ class TestParetoFrontSelect:
         with pytest.raises(ValueError, match="no front member"):
             f.select("time", limit=0.01)
 
+    def test_infeasible_message_reports_range(self):
+        """Deployment fails loudly AND diagnosably: the error names the
+        constrained axis's actual range so an unsatisfiable gate is obvious
+        from the message alone."""
+        f = ParetoFront.from_members(PAPER_FRONT)
+        with pytest.raises(ValueError, match=r"0\.088.*0\.3"):
+            f.select("time", limit=0.05)
+        # relative slack below every member is just as infeasible
+        with pytest.raises(ValueError, match="no front member"):
+            f.select("time", within=-0.99, relative=True)
+
+    def test_select_transposed_axes(self):
+        """Constraining on time while minimizing error (the gate direction
+        the sharded_serving suite uses, flipped)."""
+        f = ParetoFront.from_members(PAPER_FRONT)
+        assert f.select("error", on="time", limit=1.0).source == "c"
+        with pytest.raises(ValueError, match="no front member"):
+            f.select("error", on="time", limit=0.1)
+
     def test_unknown_objective(self):
         f = ParetoFront.from_members(PAPER_FRONT)
         with pytest.raises(KeyError):
             f.select("latency")
+        with pytest.raises(KeyError, match="unknown objective"):
+            f.select("time", on="accuracy")
+
+    def test_empty_front_rejected(self):
+        with pytest.raises(ValueError, match="at least one member"):
+            ParetoFront.from_members([])
 
     def test_prune_drops_dominated(self):
         dominated = FrontMember(fitness=(11.0, 0.5))
@@ -175,6 +200,51 @@ class TestArtifactRegistry:
     def test_unknown_kind_rejected(self):
         with pytest.raises(ValueError, match="unknown artifact kind"):
             Artifact(kind="nope", name="x", shape="y", genome={})
+
+    def test_concurrent_writers_and_tamper_detection(self, tmp_path):
+        """Many threads exporting (including re-exporting the same
+        artifact) must leave every manifest resolvable and byte-stable —
+        and a post-hoc on-disk edit is still caught by the fingerprint,
+        while untouched artifacts keep resolving."""
+        import threading
+        reg = ArtifactRegistry(str(tmp_path / "arts"))
+        n_shapes, n_threads = 6, 8
+        errors = []
+
+        def writer(tid):
+            try:
+                for s in range(n_shapes):
+                    reg.export(Artifact(
+                        kind="serve", name="qwen3-0.6b", shape=f"s{s}",
+                        genome={"max_slots": 2 ** (s % 4),
+                                "prefill_chunk": 1}))
+            except Exception as e:     # noqa: BLE001 — collected for assert
+                errors.append(e)
+
+        threads = [threading.Thread(target=writer, args=(t,))
+                   for t in range(n_threads)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        assert errors == []
+        assert len(reg.list(kind="serve")) == n_shapes
+        paths = {}
+        for s in range(n_shapes):
+            art = reg.resolve("qwen3-0.6b", f"s{s}", kind="serve")
+            assert art is not None
+            assert art.genome["max_slots"] == 2 ** (s % 4)
+            paths[s] = reg.export(art)          # re-export: byte-stable
+        # tamper with one manifest behind the registry's back
+        doc = json.load(open(paths[2]))
+        doc["genome"]["max_slots"] = 999
+        json.dump(doc, open(paths[2], "w"))
+        with pytest.raises(ValueError, match="fingerprint mismatch"):
+            reg.resolve("qwen3-0.6b", "s2", kind="serve")
+        # the damage is contained: every other artifact still resolves
+        for s in (0, 1, 3, 4, 5):
+            assert reg.resolve("qwen3-0.6b", f"s{s}", kind="serve") \
+                is not None
 
 
 class TestKernelArtifacts:

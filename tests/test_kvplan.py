@@ -1,0 +1,213 @@
+"""KV memory plans: genome resolution and registry round-trips, the modeled
+byte budget that couples slots to page size and cache dtype, the paged codec
+against its contiguous reference (including partial trailing pages and pool
+exhaustion), and the measured decode error of real prefill caches against
+the analytic bound and the fitness gate."""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import smoke_config
+from repro.core.deploy import (Artifact, ArtifactRegistry, serve_plan_from)
+from repro.core.deploy.engine import DEFAULT_SERVE_PLAN, SERVE_SPACE
+from repro.core.deploy.kvplan import (DEFAULT_KV_PLAN, KV_BUDGET_BYTES,
+                                      KV_ERROR_GATE, KV_SPACE, KVPlan,
+                                      PagedKVCache, cache_error,
+                                      measure_cache_error, quantize_pages,
+                                      roundtrip_error)
+from repro.models.transformer import init_params
+
+
+@pytest.fixture(scope="module")
+def qwen():
+    cfg = smoke_config("qwen3-0.6b")
+    return cfg, init_params(cfg, jax.random.PRNGKey(0))
+
+
+class TestKVPlanGenome:
+    def test_from_genome_fills_defaults(self):
+        plan = KVPlan.from_genome({})
+        assert plan.to_genome() == DEFAULT_KV_PLAN
+        plan = KVPlan.from_genome({"kv_dtype": "int8"})
+        assert plan.dtype == "int8"
+        assert plan.page_size == DEFAULT_KV_PLAN["kv_page_size"]
+        assert plan.replicas == DEFAULT_KV_PLAN["replicas"]
+
+    def test_engine_only_genome_is_identity_plan(self):
+        """Older serve artifacts carry only the engine schedule; they must
+        resolve to the pre-plan behavior (f32, single replica)."""
+        plan = KVPlan.from_genome({"max_slots": 8, "prefill_chunk": 4})
+        assert plan.to_genome() == DEFAULT_KV_PLAN
+
+    @pytest.mark.parametrize("bad", [
+        {"kv_page_size": 7}, {"kv_dtype": "fp4"}, {"replicas": 3}])
+    def test_out_of_space_values_rejected(self, bad):
+        with pytest.raises(ValueError):
+            KVPlan.from_genome(dict(DEFAULT_KV_PLAN, **bad))
+
+    def test_round_trip_every_point(self):
+        for page in KV_SPACE["kv_page_size"]:
+            for dt in KV_SPACE["kv_dtype"]:
+                for rep in KV_SPACE["replicas"]:
+                    g = {"kv_page_size": page, "kv_dtype": dt,
+                         "replicas": rep}
+                    assert KVPlan.from_genome(g).to_genome() == g
+
+    def test_registry_round_trip(self, tmp_path):
+        """A full serve-plan genome survives the artifact registry and
+        resolves back through serve_plan_from bit-exactly."""
+        reg = ArtifactRegistry(str(tmp_path / "arts"))
+        genome = {"max_slots": 8, "prefill_chunk": 4, "kv_page_size": 8,
+                  "kv_dtype": "int8", "replicas": 2}
+        reg.export(Artifact(kind="serve", name="qwen3-0.6b", shape="smoke",
+                            genome=genome))
+        art = reg.resolve("qwen3-0.6b", "smoke", kind="serve")
+        assert serve_plan_from(art) == genome
+        assert KVPlan.from_genome(serve_plan_from(art)).to_genome() == \
+            {k: genome[k] for k in KV_SPACE}
+
+    def test_serve_plan_from_partial_artifact(self):
+        art = Artifact(kind="serve", name="x", shape="s",
+                       genome={"kv_dtype": "bf16"})
+        plan = serve_plan_from(art)
+        assert plan["kv_dtype"] == "bf16"
+        assert {k: plan[k] for k in plan if k != "kv_dtype"} == \
+            {k: DEFAULT_SERVE_PLAN[k] for k in plan if k != "kv_dtype"}
+        assert set(plan) == set(SERVE_SPACE)
+
+
+class TestByteBudget:
+    def test_n_pages_is_ceil(self):
+        plan = KVPlan(page_size=16)
+        assert plan.n_pages(16) == 1
+        assert plan.n_pages(17) == 2
+        assert plan.n_pages(32) == 2
+
+    def test_int8_page_carries_scale(self):
+        f32 = KVPlan(page_size=16, dtype="f32").page_bytes()
+        i8 = KVPlan(page_size=16, dtype="int8").page_bytes()
+        assert i8 == f32 // 4 + 4          # quarter the data + one scale
+
+    def test_narrow_dtype_unlocks_slots(self):
+        """The coupling the joint search exploits: at the same byte budget
+        f32 clamps residency while int8 keeps the full slot count."""
+        max_len, want = 24, 8
+        f32 = KVPlan(page_size=16, dtype="f32")
+        i8 = KVPlan(page_size=16, dtype="int8")
+        assert f32.effective_slots(want, max_len) < want
+        assert i8.effective_slots(want, max_len) == want
+        # the clamp really is the byte budget, not a special case
+        assert f32.effective_slots(want, max_len) == \
+            KV_BUDGET_BYTES // f32.slot_bytes(max_len)
+
+    def test_effective_slots_never_below_one(self):
+        plan = KVPlan(page_size=32, dtype="f32")
+        assert plan.slot_bytes(1024) > KV_BUDGET_BYTES
+        assert plan.effective_slots(8, 1024) == 1
+
+    def test_effective_slots_caps_at_max_slots(self):
+        assert KVPlan(dtype="int8").effective_slots(2, 8) == 2
+
+
+class TestPagedCodec:
+    def _arr(self, n, d, seed=0):
+        return np.random.default_rng(seed).normal(
+            size=(n, d)).astype(np.float32)
+
+    @pytest.mark.parametrize("dtype", KV_SPACE["kv_dtype"])
+    def test_paged_reads_equal_contiguous(self, dtype):
+        """The differential property: a PagedKVCache read is bit-identical
+        to quantize_pages of the contiguously-stored rows — including a
+        partial trailing page (18 tokens over 8-token pages)."""
+        a = self._arr(18, 6, seed=1)
+        store = PagedKVCache(n_pages=3, page_size=8, dim=6, dtype=dtype)
+        store.allocate("s")
+        for row in a:
+            assert store.append("s", row)
+        assert store.n_tokens("s") == 18
+        got = store.read("s")
+        assert np.array_equal(got, quantize_pages(a, 8, dtype))
+
+    def test_f32_codec_is_identity(self):
+        a = self._arr(12, 4)
+        assert np.array_equal(quantize_pages(a, 4, "f32"), a)
+        assert roundtrip_error(a, 4, "f32") == 0.0
+        assert cache_error(a, 4, "f32") == 0.0
+
+    def test_measured_error_within_bound(self):
+        a = self._arr(64, 8, seed=2)
+        for dtype in ("bf16", "int8"):
+            for page in KV_SPACE["kv_page_size"]:
+                assert roundtrip_error(a, page, dtype) <= \
+                    cache_error(a, page, dtype)
+
+    def test_pool_exhaustion_refuses_cleanly(self):
+        store = PagedKVCache(n_pages=2, page_size=4, dim=3, dtype="f32")
+        store.allocate("s")
+        rows = self._arr(9, 3)
+        ok = [store.append("s", r) for r in rows]
+        assert ok == [True] * 8 + [False]   # 2 pages x 4 tokens, then full
+        assert store.n_tokens("s") == 8     # the refused row stored nothing
+        assert store.n_free_pages == 0
+
+    def test_free_returns_pages_to_pool(self):
+        store = PagedKVCache(n_pages=2, page_size=4, dim=3)
+        store.allocate("a")
+        for r in self._arr(8, 3):
+            store.append("a", r)
+        assert store.n_free_pages == 0
+        store.free("a")
+        assert store.n_free_pages == 2
+        store.allocate("b")                 # the pool is reusable
+        assert store.append("b", np.ones(3, np.float32))
+
+    def test_double_allocate_rejected(self):
+        store = PagedKVCache(n_pages=1, page_size=4, dim=2)
+        store.allocate("s")
+        with pytest.raises(ValueError, match="already allocated"):
+            store.allocate("s")
+
+    def test_empty_sequence_reads_empty(self):
+        store = PagedKVCache(n_pages=1, page_size=4, dim=2)
+        store.allocate("s")
+        assert store.read("s").shape == (0, 2)
+
+    def test_bad_construction_rejected(self):
+        with pytest.raises(ValueError, match="unknown kv dtype"):
+            PagedKVCache(n_pages=1, page_size=4, dim=2, dtype="fp8")
+        with pytest.raises(ValueError):
+            PagedKVCache(n_pages=0, page_size=4, dim=2)
+        with pytest.raises(ValueError, match="unknown kv dtype"):
+            quantize_pages(np.ones((4, 2), np.float32), 4, "fp8")
+
+
+class TestMeasuredCacheError:
+    """The fitness-gate numbers on real model activations, not synthetic
+    data: a real prefill's caches round-tripped through the plan codec."""
+
+    def _prompts(self, cfg, n=2, plen=16, seed=0):
+        rng = np.random.default_rng(seed)
+        return rng.integers(0, cfg.vocab, (n, plen)).astype(np.int32)
+
+    def test_f32_plan_is_exact(self, qwen):
+        cfg, params = qwen
+        out = measure_cache_error(cfg, params, KVPlan(dtype="f32"),
+                                  self._prompts(cfg))
+        assert out["n_leaves"] > 0
+        assert out["measured"] == 0.0 and out["bound"] == 0.0
+
+    @pytest.mark.parametrize("dtype", ("bf16", "int8"))
+    def test_quantized_plans_within_gate(self, qwen, dtype):
+        cfg, params = qwen
+        out = measure_cache_error(
+            cfg, params, KVPlan(page_size=16, dtype=dtype),
+            self._prompts(cfg))
+        assert 0.0 < out["measured"] <= out["bound"] <= KV_ERROR_GATE
+
+    def test_deterministic(self, qwen):
+        cfg, params = qwen
+        plan = KVPlan(page_size=8, dtype="int8")
+        a = measure_cache_error(cfg, params, plan, self._prompts(cfg))
+        b = measure_cache_error(cfg, params, plan, self._prompts(cfg))
+        assert a == b

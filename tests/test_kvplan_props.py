@@ -1,0 +1,116 @@
+"""Hypothesis property tests for the KV-plan genome contract: random
+attr_tweak chains over the full serve-plan space stay in-space and
+round-trip through patch docs with stable cache keys; paged reads equal the
+contiguous codec for any (tokens, dim, page, dtype); and the int8 analytic
+error bound is monotone non-increasing under page refinement with the
+measured round-trip error always inside it."""
+
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis",
+                    reason="property tests need hypothesis (pip install "
+                           ".[test])")
+from hypothesis import given, settings, strategies as st
+
+from repro.core import OperatorWeights, Patch, sample_edit
+from repro.core.deploy.engine import (DEFAULT_SERVE_PLAN,
+                                      serve_schedule_space)
+from repro.core.deploy.kvplan import (KV_SPACE, KVPlan, PagedKVCache,
+                                      cache_error, quantize_pages,
+                                      roundtrip_error)
+from repro.core.fitness import KernelWorkload
+from repro.core.serialize import patch_from_doc, patch_key
+
+TWEAK = OperatorWeights.of(attr_tweak=1.0)
+
+
+def _serve_workload() -> KernelWorkload:
+    """The serve-plan space as a workload for fingerprint/key purposes —
+    the runner is never invoked by these properties."""
+    space = serve_schedule_space("qwen3-0.6b")
+    return KernelWorkload(name="serve/qwen3-0.6b",
+                          program=space.encode(DEFAULT_SERVE_PLAN),
+                          space=space, runner=lambda g: (0.0, 0.0),
+                          time_mode="static", kind="serve")
+
+
+def _random_patch(workload, seed: int, n: int) -> Patch:
+    rng = np.random.default_rng(seed)
+    patch = Patch()
+    for _ in range(n):
+        e = sample_edit(patch.apply(workload.program), rng, TWEAK)
+        patch = patch.append(e)
+    return patch
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 10_000), n=st.integers(1, 8))
+def test_plan_edits_stay_in_space_and_resolve(seed, n):
+    """Any attr_tweak chain over the serve space decodes to an in-space
+    genome whose KV knobs resolve to a valid KVPlan that round-trips."""
+    w = _serve_workload()
+    patch = _random_patch(w, seed, n)
+    genome = w.space.decode(patch.apply(w.program))
+    assert w.space.contains(genome)
+    plan = KVPlan.from_genome(genome)
+    assert plan.to_genome() == {k: genome[k] for k in KV_SPACE}
+    # the modeled clamp is always launchable
+    assert plan.effective_slots(genome["max_slots"], 64) >= 1
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 10_000), n=st.integers(1, 6))
+def test_plan_patch_doc_roundtrip_and_key_stability(seed, n):
+    """Plan-genome patches round-trip through docs bit-identically and the
+    cache key is a pure function of (workload fingerprint, patch doc) — a
+    rebuilt space yields the same key."""
+    from repro.core.evaluator import workload_fingerprint
+    w = _serve_workload()
+    fp = workload_fingerprint(w)
+    patch = _random_patch(w, seed, n)
+    back = patch_from_doc(patch.to_doc())
+    assert back == patch
+    assert patch_key(fp, back) == patch_key(fp, patch)
+    fp2 = workload_fingerprint(_serve_workload())
+    assert patch_key(fp2, patch) == patch_key(fp, patch)
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 10_000),
+       n_tokens=st.integers(1, 70),
+       dim=st.integers(1, 9),
+       page=st.sampled_from(KV_SPACE["kv_page_size"]),
+       dtype=st.sampled_from(KV_SPACE["kv_dtype"]))
+def test_paged_reads_equal_contiguous(seed, n_tokens, dim, page, dtype):
+    """For any shape/page/dtype — partial trailing pages included — a
+    PagedKVCache read is bit-identical to the contiguous codec."""
+    a = np.random.default_rng(seed).normal(
+        size=(n_tokens, dim)).astype(np.float32)
+    store = PagedKVCache(n_pages=-(-n_tokens // page), page_size=page,
+                         dim=dim, dtype=dtype)
+    store.allocate("s")
+    for row in a:
+        assert store.append("s", row)
+    assert np.array_equal(store.read("s"), quantize_pages(a, page, dtype))
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 10_000),
+       n_tokens=st.integers(1, 96),
+       dim=st.integers(1, 8))
+def test_int8_bound_monotone_and_contains_measurement(seed, n_tokens, dim):
+    """Refining pages (32 -> 16 -> 8 -> 4) never worsens the int8 analytic
+    bound — power-of-two partitions are nested, so sub-page scales can only
+    shrink — and the measured round-trip error sits inside the bound at
+    every page size."""
+    a = np.random.default_rng(seed).normal(
+        size=(n_tokens, dim)).astype(np.float32)
+    pages = sorted(KV_SPACE["kv_page_size"], reverse=True)   # coarse->fine
+    bounds = [cache_error(a, p, "int8") for p in pages]
+    for coarse, fine in zip(bounds, bounds[1:]):
+        assert fine <= coarse + 1e-12
+    for p in pages:
+        for dtype in ("bf16", "int8"):
+            assert roundtrip_error(a, p, dtype) <= \
+                cache_error(a, p, dtype) + 1e-12

@@ -328,12 +328,13 @@ class TestKillAndResume:
         window = ctl2._window_slice(t)
         inc = ctl2.book.promoted
         if ctl2.book.active is not None:
+            from repro.core.deploy.engine import DEFAULT_SERVE_PLAN
             g = ctl2.book.active["genome"]
             ctl2.book.observe(tick=t,
                               baseline=simulate(window,
                                                 inc["genome"] if inc
-                                                else {"max_slots": 2,
-                                                      "prefill_chunk": 1}),
+                                                else dict(
+                                                    DEFAULT_SERVE_PLAN)),
                               canary=simulate(window, g))
         ctl2._sync_promoted()
         assert _tree_bytes(root) == before

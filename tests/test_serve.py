@@ -231,10 +231,14 @@ class TestServeFeedback:
 
 class TestServeSearchSurface:
     def test_schedule_space_contains_default(self):
-        from repro.core.deploy.engine import DEFAULT_ENGINE_SCHEDULE
+        from repro.core.deploy.engine import (DEFAULT_SERVE_PLAN,
+                                              ENGINE_SPACE)
+        from repro.core.deploy.kvplan import KV_SPACE
         space = serve_schedule_space("qwen3-0.6b")
-        assert space.contains(DEFAULT_ENGINE_SCHEDULE)
-        assert space.size() == 12
+        assert space.contains(DEFAULT_SERVE_PLAN)
+        # engine schedule (4*3) x KV plan (4 pages * 3 dtypes * 3 layouts)
+        assert space.size() == 432
+        assert set(space.names()) == set(ENGINE_SPACE) | set(KV_SPACE)
 
     def test_registry_routed_engine(self, qwen, tmp_path):
         """A serve artifact resolved from the registry configures the
@@ -335,6 +339,71 @@ class TestStatsHardening:
         rec = json.loads(open(path).readline())
         assert rec["features"] == [2.0, 1.0]
         assert rec["meta"] == {"trace": spec}
+
+
+class TestAdmissionAging:
+    """Regression for prompt-length-grouping starvation: grouped admission
+    prefers the queue's most common prompt length, which starved an
+    odd-length prompt behind a steady stream of same-length ones until the
+    age-based bound (admit_max_wait) forces strict FIFO."""
+
+    def _run(self, cfg, params, reqs, admit_max_wait):
+        eng = ServeEngine(cfg, params, max_len=16, max_slots=1,
+                          prefill_chunk=1, admit_max_wait=admit_max_wait)
+        out = eng.run(reqs)
+        return [r.uid for r in out], {r.uid: r.tokens for r in out}
+
+    def test_aging_bound_prevents_starvation(self, qwen):
+        cfg, params = qwen
+        gen = 3
+        long_p = _prompts(cfg, (12,), seed=11)[0]
+        shorts = _prompts(cfg, (4,) * 6, seed=12)
+
+        def reqs():
+            return [ServeRequest(uid="long", tokens=long_p,
+                                 max_new_tokens=gen)] + \
+                [ServeRequest(uid=f"s{i}", tokens=p, max_new_tokens=gen)
+                 for i, p in enumerate(shorts)]
+
+        order_unbounded, toks_unbounded = self._run(cfg, params, reqs(),
+                                                    10 ** 6)
+        order_bounded, toks_bounded = self._run(cfg, params, reqs(), 4)
+        # without the bound, grouping starves the lone 12-token prompt
+        # (submitted FIRST) until the short stream is nearly dry — it
+        # overtakes only at the final count tie, which breaks by age
+        assert order_unbounded.index("long") >= len(shorts) - 1
+        # with the bound, the aged request jumps the grouping well before
+        # the shorts run dry
+        assert order_bounded.index("long") < order_unbounded.index("long")
+        assert order_bounded.index("long") <= 2
+        # admission order is a scheduling choice — tokens stay bit-exact
+        assert toks_bounded == toks_unbounded
+        ref = oneshot_generate(cfg, params, long_p[None, :], gen)[0]
+        assert toks_bounded["long"] == ref.tolist()
+
+    def test_admission_policy_never_changes_tokens(self, qwen):
+        """Replaying the long_tail scenario (the starvation-shaped arrival
+        mix) under an aggressive aging bound and under the default must
+        produce identical tokens per request."""
+        from repro.core.liveloop.traces import replay, synthesize
+        cfg, params = qwen
+        trace = synthesize("long_tail", vocab=cfg.vocab, n_requests=8,
+                           max_prompt=10, gen=3, seed=5)
+
+        def run(wait):
+            eng = ServeEngine(cfg, params, max_len=trace.max_len(),
+                              max_slots=2, prefill_chunk=1,
+                              admit_max_wait=wait)
+            report = replay(eng, trace)
+            return {r.uid: r.tokens for r in report.results}
+
+        a, b = run(2), run(32)
+        assert a and a == b
+
+    def test_bad_admit_max_wait_rejected(self, qwen):
+        cfg, params = qwen
+        with pytest.raises(ValueError, match="admit_max_wait"):
+            ServeEngine(cfg, params, max_len=12, admit_max_wait=0)
 
 
 class TestDemoTraceShim:

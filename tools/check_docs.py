@@ -48,6 +48,7 @@ EXTERNAL_MODULES = {"pytest", "pip"}
 REQUIRED_ENTRY_POINTS = {
     "repro.core.analysis",
     "repro.core.deploy",
+    "repro.core.deploy.router",
     "repro.core.liveloop",
     "repro.core.surrogate",
     "repro.launch.serve",
